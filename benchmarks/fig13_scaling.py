@@ -1,0 +1,67 @@
+"""Paper Fig 12/13: throughput scaling vs worker count.
+
+Lower the same arch on growing data-axis meshes (model axis fixed at 16) and
+derive the roofline-bound throughput; normalized throughput = T(N)/T(1-group)
+— the static-analysis analogue of the paper's normalized-throughput plot.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_with_devices
+
+CODE = """
+from repro.configs import RunConfig, ShapeConfig, SHAPES, get_config
+from repro.core.runtime import Runtime
+from repro.core.transform import (analyze, batch_shardings, make_train_step,
+                                  state_shardings)
+from repro.launch.mesh import make_mesh
+from repro.models.model import build_model
+from repro.optim.optimizer import make_optimizer
+from repro.utils.hlo import analyze_hlo
+from repro.utils.traffic import estimate_traffic
+from repro.utils.roofline import HW
+
+data = __DATA__
+arch = "__ARCH__"
+cfg = get_config(arch)
+shape = ShapeConfig("scale", 4096, 16 * data, "train")
+mesh = make_mesh((data, 16), ("data", "model"))
+rc = RunConfig(capacity_mode="capped", remat="full")
+rt = Runtime(cfg, rc, shape, mesh=mesh)
+model = build_model(cfg, rt)
+plan = analyze(model, rt)
+rt.plan = plan
+opt = make_optimizer(rt)
+step = make_train_step(model, opt, rt, plan)
+state = jax.eval_shape(opt.init, model.abstract_params())
+sh = state_shardings(plan, state)
+bs = batch_shardings(plan, model.input_specs(shape))
+with jax.set_mesh(mesh):
+    compiled = jax.jit(step, in_shardings=(sh, bs), out_shardings=(sh, None),
+                       donate_argnums=0).lower(
+        state, model.input_specs(shape)).compile()
+h = analyze_hlo(compiled.as_text(), f32_collective_scale=0.5)
+chips = data * 16
+tr = estimate_traffic(cfg, shape, chips=chips, model_shards=rt.model_shards,
+                      remat="full", zero_stage=plan.zero_stage)
+bound = max(h.dot_flops / HW.peak_flops, tr.total / HW.hbm_bw,
+            h.collective_bytes / HW.link_bw)
+print("RESULT:" + json.dumps({"tok_s": shape.tokens / bound,
+                              "chips": chips}))
+"""
+
+
+def main(archs=("phi3-medium-14b", "command-r-35b", "parallax-lm")):
+    for arch in archs:
+        base = None
+        for data in (1, 2, 4, 8, 16):
+            res = run_with_devices(
+                CODE.replace("__DATA__", str(data)).replace("__ARCH__", arch))
+            if base is None:
+                base = res["tok_s"]
+            emit(f"fig13/{arch}/chips{res['chips']}", 0.0,
+                 f"tok_s={res['tok_s']:.0f};"
+                 f"normalized={res['tok_s']/base:.2f}x_of_16chip")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Kernel micro-benchmarks: interpret-mode correctness timing is meaningless
+for perf, so we report the kernel's analytic VMEM working set + MXU-aligned
+tile shapes and the wall time of the *reference* path on CPU (the quantity
+that is measurable here), per shape."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ref
+
+
+def main():
+    for (b, s, h, d) in [(1, 512, 8, 64), (1, 1024, 8, 128)]:
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (b, s, h, d), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (b, s, h, d), jnp.bfloat16)
+        fn = jax.jit(lambda a, b2, c: ref.flash_attention_ref(a, b2, c))
+        sec = time_fn(fn, q, k, v)
+        vmem_kb = (128 * d * 2 * 3 + 128 * d * 4 + 128 * 8) / 1024
+        emit(f"kernels/flash_ref/b{b}s{s}h{h}d{d}", sec * 1e6,
+             f"kernel_vmem_kb={vmem_kb:.0f};blocks=128x128")
+    for (b, s, h, e) in [(2, 512, 4, 64)]:
+        ks = jax.random.split(jax.random.key(1), 5)
+        r = jax.random.normal(ks[0], (b, s, h, e), jnp.float32)
+        kk = jax.random.normal(ks[1], (b, s, h, e), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, h, e), jnp.float32)
+        lw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, e)) * 0.3 - 1)
+        u = jax.random.normal(ks[4], (h, e)) * 0.1
+        st = jnp.zeros((b, h, e, e), jnp.float32)
+        fn = jax.jit(lambda *a: ref.wkv_ref(*a)[0])
+        sec = time_fn(fn, r, kk, v, lw, u, st)
+        emit(f"kernels/wkv_ref/b{b}s{s}h{h}e{e}", sec * 1e6,
+             f"state_vmem_kb={e*e*4/1024:.0f};chunk=32")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""§Roofline aggregation: read results/dryrun/*.json -> markdown + CSV."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS, emit
+
+
+def rows(pattern="*.json", out_dir=None):
+    out_dir = out_dir or os.path.join(RESULTS, "dryrun")
+    out = []
+    for f in sorted(glob.glob(os.path.join(out_dir, pattern))):
+        d = json.load(open(f))
+        if not d.get("ok"):
+            out.append(d)
+            continue
+        out.append(d)
+    return out
+
+
+def main():
+    for d in rows():
+        tag = f"{d['arch']}/{d['shape']}/{d['mesh']}"
+        if not d.get("ok"):
+            emit(f"roofline/{tag}", 0.0, "FAILED")
+            continue
+        r = d["roofline"]
+        emit(f"roofline/{tag}", r["bound_s"] * 1e6 if "bound_s" in r else
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"compute_ms={r['compute_s']*1e3:.1f};"
+             f"memory_ms={r['memory_s']*1e3:.1f};"
+             f"collective_ms={r['collective_s']*1e3:.1f};"
+             f"dominant={r['dominant']};"
+             f"useful_flops={r['useful_flops_fraction']:.2f};"
+             f"roofline_frac={r['roofline_fraction']:.3f};"
+             f"peak_GB={d['memory_analysis']['peak_bytes']/1e9:.1f}")
+
+
+def markdown(out_dir=None) -> str:
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO flops | roofline frac | peak GB/chip |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for d in rows(out_dir=out_dir):
+        if not d.get("ok"):
+            lines.append(f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+                         f"FAILED: {d['error'][:40]} | | | | | | |")
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['dominant']} "
+            f"| {r['useful_flops_fraction']:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {d['memory_analysis']['peak_bytes']/1e9:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    main()

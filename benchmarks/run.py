@@ -1,0 +1,37 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run table4       # one table
+
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    which = set(sys.argv[1:]) or {"table1", "table3", "table4", "fig13",
+                                  "roofline", "kernels"}
+    if "table1" in which:
+        from benchmarks import table1_census
+        table1_census.main()
+    if "table3" in which:
+        from benchmarks import table3_transfer
+        table3_transfer.main()
+    if "table4" in which:
+        from benchmarks import table4_ablation
+        table4_ablation.main()
+    if "fig13" in which:
+        from benchmarks import fig13_scaling
+        fig13_scaling.main()
+    if "roofline" in which:
+        from benchmarks import roofline_table
+        roofline_table.main()
+    if "kernels" in which:
+        from benchmarks import kernel_bench
+        kernel_bench.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Table 1 analogue: dense/sparse parameter census + per-iteration
+touched subset (α·V rows) per architecture, plus measured single-device step
+time on the reduced config (the CPU-measurable throughput quantity)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit, time_fn
+from repro.configs import (ALL_ARCHS, PAPER_ARCHS, RunConfig, SHAPES,
+                           ShapeConfig, get_config, reduced)
+from repro.core.runtime import Runtime
+from repro.core.sparsity import run_census
+from repro.core.transform import get_runner
+from repro.data import SyntheticLM
+from repro.models.model import build_model
+
+
+def main():
+    shape = SHAPES["train_4k"]
+    rc = RunConfig()
+    for arch in ALL_ARCHS + PAPER_ARCHS:
+        cfg = get_config(arch)
+        rt = Runtime(cfg, rc, shape)
+        model = build_model(cfg, rt)
+        census = run_census(model.specs(), cfg, shape, rc, replicas=16)
+        derived = (f"dense_M={census.dense_params/1e6:.0f};"
+                   f"sparse_M={census.sparse_params/1e6:.0f};"
+                   f"alpha={census.alpha:.4f};"
+                   f"subset_M={census.alpha*census.sparse_params/1e6:.2f}")
+        # measured: reduced-config train step wall time (single device)
+        small = reduced(cfg)
+        tiny = ShapeConfig("bench", 64, 2, "train")
+        runner = get_runner(small, tiny,
+                            RunConfig(attention_impl="naive", remat="none"))
+        ds = SyntheticLM(small.vocab_size, 64, 2, is_encdec=small.is_encdec,
+                         frames_dim=small.d_model if small.family == "audio"
+                         else 0, frames_len=16)
+        batch = ds.batch(0)
+
+        def step(b):
+            # runner.run replaces the (donated) state each call
+            return runner.run(b)["loss"]
+
+        sec = time_fn(step, batch)
+        emit(f"table1/{arch}", sec * 1e6,
+             derived + f";reduced_tok_s={tiny.tokens/sec:.0f}")
+
+
+if __name__ == "__main__":
+    main()

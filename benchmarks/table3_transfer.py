@@ -1,0 +1,77 @@
+"""Paper Table 3: analytic per-replica transfer bytes vs HLO-measured
+collective bytes for the embedding exchange, per communication method.
+
+Measurement: lower the paper's LM on the production mesh under each method
+and diff the HLO collective totals against a no-embedding-exchange baseline
+is noisy; instead we lower a minimal embedding-only step (lookup -> loss ->
+grad -> sgd) so every collective belongs to the exchange under test.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import emit, run_with_devices
+from repro.core import cost_model as cm
+
+CODE = """
+import jax.numpy as jnp
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from repro.core.embedding import EmbedCtx, lookup
+from repro.utils.hlo import analyze_hlo
+
+V, E, B, S = 65536, 512, 256, 256     # ~64k-row table, 512-dim rows
+mesh = jax.make_mesh((16, 16), ("data", "model"),
+                     axis_types=(AxisType.Auto,)*2)
+ctx = EmbedCtx(mesh=mesh, method="__METHOD__", batch_axes=("data",),
+               model_axis="model", vocab_padded=V, wire_dtype=jnp.bfloat16,
+               local_agg=__LA__, exact=False)
+
+def step(table, ids):
+    out, _ = lookup(table, ids, ctx=ctx, capacity=__CAP__)
+    loss = jnp.sum(out.astype(jnp.float32) ** 2)
+    return loss
+
+tspec = P(None, None) if ctx.method == "mpi_gatherv" else P("model", None)
+table = jax.ShapeDtypeStruct((V, E), jnp.bfloat16)
+ids = jax.ShapeDtypeStruct((B, S), jnp.int32)
+with jax.set_mesh(mesh):
+    g = jax.jit(jax.grad(step), in_shardings=(
+        NamedSharding(mesh, tspec), NamedSharding(mesh, P("data", None))))
+    compiled = g.lower(table, ids).compile()
+s = analyze_hlo(compiled.as_text(), f32_collective_scale=0.5)
+print("RESULT:" + json.dumps({"bytes": s.collective_bytes,
+                              "by_kind": s.collective_by_kind}))
+"""
+
+
+def main():
+    V, E, B, S = 65536, 512, 256, 256
+    b = V * E * 2                        # table bytes (bf16)
+    local_tokens = B * S // 16
+    import math
+    uniq = V * (1 - math.exp(local_tokens * math.log1p(-1 / V)))
+    alpha = uniq / V
+    cap = int(uniq * 1.0) + 1
+    dims = cm.MeshDims(model=16, data=16)
+    analytic = {
+        "ps": cm.sparse_ps_bytes(b, alpha, dims),
+        "ps_gather": cm.sparse_ps_gather_bytes(b, alpha, dims),
+        "mpi_gatherv": cm.sparse_mpi_bytes(b, alpha, dims),
+    }
+    for method in ("ps", "ps_gather", "mpi_gatherv"):
+        res = run_with_devices(
+            CODE.replace("__METHOD__", method)
+                .replace("__LA__", "True").replace("__CAP__", str(cap)))
+        emit(f"table3/{method}", 0.0,
+             f"hlo_MB={res['bytes']/1e6:.1f};analytic_MB={analytic[method]/1e6:.1f};"
+             f"alpha={alpha:.3f}")
+    # LA off: raw token buffers instead of deduped rows
+    res = run_with_devices(
+        CODE.replace("__METHOD__", "ps").replace("__LA__", "False")
+            .replace("__CAP__", str(cap)))
+    emit("table3/ps_noLA", 0.0, f"hlo_MB={res['bytes']/1e6:.1f};"
+         f"tokens_per_replica={local_tokens}")
+
+
+if __name__ == "__main__":
+    main()

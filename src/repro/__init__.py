@@ -1,0 +1,13 @@
+"""repro — Parallax (sparsity-aware hybrid-communication data-parallel
+training) reproduced as a TPU-native JAX framework. See DESIGN.md."""
+
+__version__ = "1.0.0"
+
+from repro.configs import (  # noqa: F401
+    ModelConfig, ShapeConfig, RunConfig, SHAPES, ALL_ARCHS, PAPER_ARCHS,
+    get_config, all_configs, reduced, shapes_for,
+)
+from repro.core import (  # noqa: F401
+    Runtime, Plan, analyze, get_runner,
+)
+from repro.data import shard, SyntheticLM  # noqa: F401

@@ -1,0 +1,175 @@
+"""Fault-tolerant sharded checkpointing.
+
+Layout (one directory per step):
+    ckpt_dir/
+      step_000100.tmp/          # written first
+        manifest.json           # tree structure, shapes, dtypes, shard map
+        shard_<host>_<i>.npz    # one file per (host, leaf-group)
+      step_000100/              # atomic rename commits the checkpoint
+
+Guarantees:
+  * atomicity — readers only ever see fully-written checkpoints (tmp dir is
+    renamed after fsync of the manifest; a crash mid-write leaves only .tmp).
+  * elasticity — restore reshards to ANY mesh: arrays are saved as full
+    logical tensors per leaf (gathered per host), so a 16x16 checkpoint
+    restores onto 2x16x16 or a single device (tests/test_checkpoint.py).
+  * async — AsyncCheckpointer snapshots device arrays to host then writes in
+    a background thread, keeping the train loop running (the straggler /
+    failure story needs frequent checkpoints to be cheap).
+
+For multi-host deployment the same format shards by process index; in this
+single-process repro host == process 0 holds everything.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import ml_dtypes  # numpy extension dtypes (bfloat16 etc.)
+import numpy as np
+
+from repro.utils.tree import named_leaves
+
+# np.savez cannot store ml_dtypes (bfloat16 -> void); store a bit-view and
+# record the logical dtype in the manifest.
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _tree_paths(tree) -> list[str]:
+    return [n for n, _ in named_leaves(tree)]
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any,
+                    extra: Optional[dict] = None) -> str:
+    """Write state atomically; returns the committed directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(ckpt_dir, name + ".tmp")
+    final = os.path.join(ckpt_dir, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = named_leaves(state)
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    arrays = {}
+    for i, (path, leaf) in enumerate(leaves):
+        if leaf is None:
+            manifest["leaves"].append({"path": path, "none": True})
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(arr.dtype)
+        if logical_dtype in _VIEW_AS:
+            arr = arr.view(_VIEW_AS[logical_dtype])
+        key = f"a{i}"
+        arrays[key] = arr
+        manifest["leaves"].append({
+            "path": path, "key": key, "shape": list(arr.shape),
+            "dtype": logical_dtype, "none": False,
+        })
+    np.savez(os.path.join(tmp, "shard_0_0.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):          # idempotent re-save of the same step
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, state_like: Any,
+                       step: Optional[int] = None,
+                       shardings: Any = None) -> tuple[Any, int, dict]:
+    """Restore into the structure of ``state_like``, resharding to
+    ``shardings`` (elastic restore: any mesh, any device count)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "shard_0_0.npz"))
+
+    by_path = {l["path"]: l for l in manifest["leaves"]}
+    flat_sh = named_leaves(shardings) if shardings is not None else None
+    sh_by_path = dict(flat_sh) if flat_sh else {}
+
+    def restore_leaf(path, like):
+        ent = by_path.get(path)
+        if ent is None or ent.get("none"):
+            return like
+        arr = data[ent["key"]]
+        if ent["dtype"] in _VIEW_AS:
+            arr = arr.view(getattr(ml_dtypes, ent["dtype"]))
+        sh = sh_by_path.get(path)
+        if sh is not None:
+            return jax.device_put(arr, sh)
+        return jax.device_put(arr)
+
+    from repro.utils.tree import tree_map_with_path_names
+    state = tree_map_with_path_names(restore_leaf, state_like)
+    return state, manifest["step"], manifest.get("extra", {})
+
+
+def gc_checkpoints(ckpt_dir: str, keep: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host + background write; at most one write in flight."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_committed: Optional[int] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, state: Any, extra: Optional[dict] = None):
+        self.wait()
+        # snapshot on the caller thread (device -> host) so training can
+        # overwrite donated buffers immediately afterwards
+        host_state = jax.tree.map(
+            lambda a: None if a is None else np.asarray(jax.device_get(a)),
+            state)
+
+        def work():
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_state, extra)
+                gc_checkpoints(self.ckpt_dir, self.keep)
+                self.last_committed = step
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()

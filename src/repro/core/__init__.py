@@ -1,0 +1,9 @@
+"""Parallax core: the paper's contribution (hybrid communication, local
+aggregation, operation placement, automatic transformation) in JAX."""
+from repro.core.runtime import Runtime
+from repro.core.plan import Plan, ParamPlan, MeshRules, default_rules
+from repro.core.transform import (
+    analyze, get_runner, make_train_step, make_decode_step, make_prefill_step,
+    state_shardings, batch_shardings, param_shardings,
+)
+from repro.core import cost_model, sparsity, embedding, xent

@@ -1,0 +1,137 @@
+"""Table 3 of the paper, generalized (DESIGN.md §2).
+
+Per-chip wire bytes per training step for one parameter of size ``b`` bytes:
+
+  dense:
+    allreduce (MPI/ring):  2 (N-1)/N · b          [paper Table 3, dense-MPI]
+    fsdp  (PS-for-dense):  2 b                    [pull b (all-gather) + push
+                                                   b (reduce-scatter); paper
+                                                   Table 3, dense-PS]
+  sparse (α = touched fraction per replica-step):
+    ps (row-sharded):      pull 2α b (M-1)/M  +  push 2 b_shard (D-1)/D
+                           where b_shard = b/M   [shard psum over data]
+    ps_gather push:        pull 2α b + push D α b [sparse all-gather over data]
+    mpi_gatherv:           2 (N-1) α b            [paper Table 3, sparse-MPI]
+
+N = total replicas (data·pod), M = model-axis size, D = data(+pod) size.
+The planner picks argmin per parameter; RunConfig.comm_mode can force the
+paper's baselines (ps / mpi).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MeshDims:
+    model: int = 1
+    data: int = 1
+    pod: int = 1
+
+    @property
+    def replicas(self) -> int:          # N in the paper
+        return self.data * self.pod
+
+    @property
+    def chips(self) -> int:
+        return self.model * self.data * self.pod
+
+
+def dense_allreduce_bytes(b: float, dims: MeshDims) -> float:
+    n = dims.replicas
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) / n * b
+
+
+def dense_fsdp_bytes(b: float, dims: MeshDims) -> float:
+    n = dims.replicas
+    if n <= 1:
+        return 0.0
+    # all-gather params (fwd+bwd counted once: XLA rematerializes the gather
+    # in bwd under remat; we count the roofline-honest 2x) + reduce-scatter
+    return 2.0 * (n - 1) / n * b + 0.0  # ring AG+RS == AR volume; ≈ 2b for large N
+
+
+def sparse_ps_bytes(b: float, alpha: float, dims: MeshDims) -> float:
+    m, d = dims.model, dims.replicas
+    pull = 2.0 * alpha * b * (m - 1) / m if m > 1 else 0.0
+    push = 2.0 * (b / max(m, 1)) * (d - 1) / d if d > 1 else 0.0
+    return pull + push
+
+
+def sparse_ps_gather_bytes(b: float, alpha: float, dims: MeshDims) -> float:
+    m, d = dims.model, dims.replicas
+    pull = 2.0 * alpha * b * (m - 1) / m if m > 1 else 0.0
+    push = d * alpha * b if d > 1 else 0.0
+    return pull + push
+
+
+def sparse_mpi_bytes(b: float, alpha: float, dims: MeshDims) -> float:
+    n = dims.replicas
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) * alpha * b
+
+
+def choose_method(*, b: float, sparse: bool, alpha: float, dims: MeshDims,
+                  comm_mode: str = "hybrid", memory_forced_fsdp: bool = False,
+                  can_shard_rows: bool = True) -> tuple[str, dict]:
+    """Pick the exchange method for one parameter; returns (method, costs).
+
+    can_shard_rows: False when no mesh axis can row-shard the table (e.g.
+    the dp dense strategy uses every axis for batch) — the PS family is then
+    infeasible and the sparse param competes as dense allreduce vs gatherv.
+    """
+    costs = {
+        "allreduce": dense_allreduce_bytes(b, dims),
+        "fsdp": dense_fsdp_bytes(b, dims),
+        "ps": sparse_ps_bytes(b, alpha, dims),
+        "ps_gather": sparse_ps_gather_bytes(b, alpha, dims),
+        "mpi_gatherv": sparse_mpi_bytes(b, alpha, dims),
+    }
+    if not sparse:
+        if comm_mode == "ps" or memory_forced_fsdp:
+            return "fsdp", costs
+        return "allreduce", costs
+    # sparse parameter
+    if comm_mode == "mpi":
+        return "mpi_gatherv", costs
+    if comm_mode in ("ps", "hybrid"):
+        cands = ["mpi_gatherv", "allreduce"] if comm_mode == "hybrid" else []
+        if can_shard_rows:
+            cands += ["ps", "ps_gather"]
+        if not cands:
+            cands = ["mpi_gatherv"]
+        best = min(cands, key=lambda k: costs[k])
+        return best, costs
+    raise ValueError(f"unknown comm_mode {comm_mode!r}")
+
+
+def pick_dense_strategy(cfg, shape, dims: MeshDims, hbm_bytes: float = 16e9,
+                        param_dtype_bytes: int = 2) -> str:
+    """Choose tp(+SP) vs dp(ZeRO-3 over every axis) for dense params.
+
+    Per-chip wire napkin (per layer):
+      tp+sp: ~12 seq-scattered activation units = 12·T_repl·D·w·(m-1)/m
+      dp:    ~3 passes x full layer params      = 3·P_L·w
+    MoE and decode need the model axis (EP / cache sharding) -> tp.
+    """
+    if cfg.n_experts or shape.kind == "decode" or dims.model <= 1:
+        return "tp"
+    chips = dims.chips
+    if shape.global_batch % chips != 0 and             shape.global_batch % (dims.data * dims.model) != 0:
+        return "tp"
+    if cfg.vocab_size * cfg.d_model * param_dtype_bytes > 0.25 * hbm_bytes:
+        # replicated embedding table would crowd out HBM... unless the
+        # alternative is worse; keep the conservative bound
+        pass
+    t_repl = shape.tokens / max(dims.replicas, 1)
+    m = dims.model
+    tp_unit = t_repl * cfg.d_model * param_dtype_bytes * (m - 1) / m
+    layers = cfg.n_layers + (cfg.enc_layers if cfg.is_encdec else 0)
+    p_layer = max((cfg.param_count() - cfg.vocab_size * cfg.d_model *
+                   (1 if cfg.tie_embeddings else 2)) / max(layers, 1), 1)
+    tp_coll = 12 * tp_unit
+    dp_coll = 3 * p_layer * param_dtype_bytes
+    return "dp" if dp_coll < tp_coll else "tp"

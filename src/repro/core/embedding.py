@@ -1,0 +1,252 @@
+"""PS-style sharded embedding — the paper's sparse path, TPU-native.
+
+The embedding table is row-sharded over the ``model`` mesh axis: each shard
+is a "parameter server" for its vocab rows (DESIGN.md §2). One custom_vjp
+wraps the whole lookup; its forward and backward are each *non-differentiated*
+shard_maps, so every byte on the wire is written explicitly (no autodiff
+transpose of collectives — shard_map transposition of replicated operands is
+subtle, and the paper's contribution is exactly this exchange schedule):
+
+  local aggregation (C2): each replica dedupes its local ids (sort/unique)
+      before any wire traffic; backward segment-sums cotangent rows into the
+      same deduped buffer.
+  pull (forward): fetch owned rows shard-locally, psum the deduped row
+      buffer over ``model`` → per-replica wire bytes ≈ 2αb (Table 3, PS).
+  push (backward): either
+      ``ps``        owner-local scatter-add into the dense shard + psum over
+                    ``data``/``pod`` (2·b/M per chip), or
+      ``ps_gather`` all-gather the sparse (ids, rows) buffers over the
+                    replica axes + owner-local scatter-add (D·αb),
+      picked per workload by core/cost_model.py.
+  mpi_gatherv: the paper's MPI baseline — table replicated; push =
+      all-gather of sparse buffers over every replica (2(N-1)αb).
+
+Static-shape adaptation: the dedupe buffer has ``capacity`` rows per replica
+(DESIGN.md "Static shapes caveat"); ``exact`` capacity == local token count
+never drops; overflow is counted in the metrics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace as _dc_replace
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class EmbedCtx:
+    """Static context for the sharded lookup (hashable for custom_vjp)."""
+    mesh: Optional[Mesh]
+    method: str                 # ps | ps_gather | mpi_gatherv | dense
+    batch_axes: tuple           # mesh axes the batch is sharded over
+    model_axis: str             # mesh axis of the row shards
+    vocab_padded: int
+    wire_dtype: Any             # dtype on the wire (OPSW)
+    local_agg: bool             # C2: dedupe before exchange
+    exact: bool = True          # exact capacity: size buffer per call-site
+
+    @property
+    def model_shards(self) -> int:
+        if self.mesh is None or not self.model_axis or \
+                self.method in ("dense", "allreduce", "mpi_gatherv"):
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def replicas(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+
+def dedupe(ids_flat: jax.Array, capacity: int, vocab_padded: int,
+           local_agg: bool) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(unique_ids[capacity], inverse[T], n_dropped). Sentinel = vocab_padded.
+
+    inverse entries that overflowed capacity point one-past-end (= capacity),
+    which readers treat as a zero row.
+    """
+    t = ids_flat.shape[0]
+    if not local_agg:
+        return (ids_flat.astype(jnp.int32),
+                jnp.arange(t, dtype=jnp.int32),
+                jnp.zeros((), jnp.int32))
+    capacity = min(capacity, t)
+    uids, inv = jnp.unique(
+        ids_flat, size=capacity, fill_value=vocab_padded, return_inverse=True)
+    sorted_ids = jnp.sort(ids_flat)
+    n_unique = 1 + jnp.sum(sorted_ids[1:] != sorted_ids[:-1]).astype(jnp.int32)
+    dropped = jnp.maximum(n_unique - capacity, 0)
+    valid = uids[inv] == ids_flat
+    inv = jnp.where(valid, inv, capacity)
+    return uids.astype(jnp.int32), inv.astype(jnp.int32), dropped
+
+
+# ---------------------------------------------------------------------------
+# per-device bodies (never auto-differentiated)
+# ---------------------------------------------------------------------------
+
+def _fwd_local(table_shard, ids_loc, ctx: EmbedCtx, capacity: int):
+    """-> out (B_loc,S,E), uids (1,cap), inv (B_loc,S), dropped (scalar)."""
+    b_loc, s = ids_loc.shape
+    flat = ids_loc.reshape(-1).astype(jnp.int32)
+    uids, inv, dropped = dedupe(flat, capacity, ctx.vocab_padded,
+                                ctx.local_agg)
+    vs = table_shard.shape[0]
+    if ctx.model_shards > 1:
+        m = jax.lax.axis_index(ctx.model_axis)
+        local = uids - m * vs
+        owned = (local >= 0) & (local < vs)
+        rows = jnp.take(table_shard, jnp.clip(local, 0, vs - 1), axis=0)
+        rows = jnp.where(owned[:, None], rows, 0).astype(ctx.wire_dtype)
+        rows = jax.lax.psum(rows, ctx.model_axis)     # pull: ~2αb over model
+        rows = rows.astype(table_shard.dtype)
+    else:
+        rows = jnp.take(table_shard, jnp.clip(uids, 0, vs - 1), axis=0)
+        rows = jnp.where((uids < vs)[:, None], rows, 0)
+    rows_pad = jnp.concatenate([rows, jnp.zeros_like(rows[:1])], axis=0)
+    out = jnp.take(rows_pad, inv, axis=0).reshape(b_loc, s, -1)
+    return out, uids[None], inv.reshape(b_loc, s), dropped
+
+
+def _bwd_local(uids_row, inv_loc, d_out_loc, vs_shard, ctx: EmbedCtx):
+    """-> d_table shard (vs_shard, E). Runs the push exchange."""
+    uids = uids_row[0]
+    cap = uids.shape[0]
+    d_flat = d_out_loc.reshape(-1, d_out_loc.shape[-1])
+    # C2 local aggregation: segment-sum cotangents into the deduped buffer
+    d_rows = jnp.zeros((cap + 1, d_flat.shape[-1]), jnp.float32)
+    d_rows = d_rows.at[inv_loc.reshape(-1)].add(d_flat.astype(jnp.float32))
+    d_rows = d_rows[:cap].astype(ctx.wire_dtype)
+
+    if ctx.method == "mpi_gatherv":
+        # paper's MPI baseline: all-gather (ids, rows) over every replica
+        if ctx.batch_axes:
+            uids_all = jax.lax.all_gather(uids, ctx.batch_axes,
+                                          tiled=False).reshape(-1)
+            rows_all = jax.lax.all_gather(d_rows, ctx.batch_axes,
+                                          tiled=False).reshape(-1, d_rows.shape[-1])
+        else:
+            uids_all, rows_all = uids, d_rows
+        idx = jnp.where((uids_all >= 0) & (uids_all < vs_shard),
+                        uids_all, vs_shard)
+        d = jnp.zeros((vs_shard + 1, rows_all.shape[-1]), jnp.float32)
+        d = d.at[idx].add(rows_all.astype(jnp.float32))
+        return d[:vs_shard]
+
+    m = jax.lax.axis_index(ctx.model_axis) if ctx.model_shards > 1 else 0
+    if ctx.method == "ps_gather":
+        # sparse all-gather over replicas, owner-local scatter (D·αb)
+        if ctx.batch_axes:
+            uids_all = jax.lax.all_gather(uids, ctx.batch_axes,
+                                          tiled=False).reshape(-1)
+            rows_all = jax.lax.all_gather(d_rows, ctx.batch_axes,
+                                          tiled=False).reshape(-1, d_rows.shape[-1])
+        else:
+            uids_all, rows_all = uids, d_rows
+        local = uids_all - m * vs_shard
+        owned = (local >= 0) & (local < vs_shard)
+        idx = jnp.where(owned, local, vs_shard)
+        d = jnp.zeros((vs_shard + 1, rows_all.shape[-1]), jnp.float32)
+        d = d.at[idx].add(rows_all.astype(jnp.float32))
+        return d[:vs_shard]
+
+    # "ps": owner-local scatter-add + dense shard psum over replicas (2b/M)
+    local = uids - m * vs_shard
+    owned = (local >= 0) & (local < vs_shard)
+    idx = jnp.where(owned, local, vs_shard)
+    d = jnp.zeros((vs_shard + 1, d_rows.shape[-1]), jnp.float32)
+    d = d.at[idx].add(d_rows.astype(jnp.float32))
+    d = d[:vs_shard]
+    if ctx.batch_axes:
+        d = jax.lax.psum(d.astype(ctx.wire_dtype), ctx.batch_axes
+                         ).astype(jnp.float32)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# the differentiable global lookup (custom VJP around whole shard_maps)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _lookup(table, ids, ctx: EmbedCtx, capacity: int):
+    out, _, _, dropped = _lookup_fwd_impl(table, ids, ctx, capacity)
+    return out, dropped
+
+
+def _lookup_fwd_impl(table, ids, ctx: EmbedCtx, capacity: int):
+    if ctx.mesh is None or ctx.method in ("dense", "allreduce"):
+        out, uids, inv, dropped = _fwd_local(table, ids, ctx, capacity)
+        return out, uids, inv, dropped
+    ba = ctx.batch_axes or None
+    table_spec = P(None, None) if ctx.method == "mpi_gatherv" \
+        else P(ctx.model_axis, None)
+    fn = jax.shard_map(
+        lambda t, i: _fwd_local(t, i, ctx, capacity),
+        mesh=ctx.mesh,
+        in_specs=(table_spec, P(ba, None)),
+        out_specs=(P(ba, None, None), P(ba, None), P(ba, None), P()),
+        check_vma=False,
+    )
+    return fn(table, ids)
+
+
+def _lookup_fwd(table, ids, ctx: EmbedCtx, capacity: int):
+    out, uids, inv, dropped = _lookup_fwd_impl(table, ids, ctx, capacity)
+    return (out, dropped), (uids, inv, jnp.zeros((0,), table.dtype))
+
+
+def _lookup_bwd(ctx: EmbedCtx, capacity: int, res, cts):
+    d_out, _ = cts
+    uids, inv, dtype_probe = res
+    vocab_rows = ctx.vocab_padded
+    vs = vocab_rows // ctx.model_shards
+    if ctx.mesh is None or ctx.method in ("dense", "allreduce"):
+        # global-semantics dense path: the scatter-add cotangent is the full
+        # gradient; XLA inserts the dense all-reduce across replicas (no
+        # named-axis collectives outside shard_map)
+        d_table = _bwd_local(uids, inv, d_out, vocab_rows,
+                             _dc_replace(ctx, batch_axes=()))
+    else:
+        ba = ctx.batch_axes or None
+        table_spec = P(None, None) if ctx.method == "mpi_gatherv" \
+            else P(ctx.model_axis, None)
+        fn = jax.shard_map(
+            lambda u, i, d: _bwd_local(u, i, d, vs, ctx),
+            mesh=ctx.mesh,
+            in_specs=(P(ba, None), P(ba, None), P(ba, None, None)),
+            out_specs=table_spec,
+            check_vma=False,
+        )
+        d_table = fn(uids, inv, d_out)
+    return (d_table.astype(dtype_probe.dtype),
+            np.zeros(inv.shape, dtype=jax.dtypes.float0))
+
+
+_lookup.defvjp(_lookup_fwd, _lookup_bwd)
+
+
+def lookup(table: jax.Array, ids: jax.Array, *, ctx: EmbedCtx,
+           capacity: int) -> tuple[jax.Array, dict]:
+    """Embedding lookup through the PS exchange. ids: (B, S) global ids."""
+    if ctx.mesh is not None and ctx.method in ("dense", "allreduce"):
+        local_tokens = ids.size        # global dedupe in global semantics
+    else:
+        local_tokens = max(ids.size // max(ctx.replicas, 1), 1)
+    if ctx.exact:
+        # exact mode never drops: buffer sized to this call's local tokens
+        capacity = min(local_tokens, ctx.vocab_padded)
+    else:
+        capacity = min(capacity, local_tokens, ctx.vocab_padded)
+    out, dropped = _lookup(table, ids, ctx, capacity)
+    nrows = capacity if ctx.local_agg else local_tokens
+    metrics = {"embed_rows": jnp.asarray(nrows, jnp.int32),
+               "embed_dropped": jax.lax.stop_gradient(dropped)}
+    return out.astype(table.dtype), metrics

@@ -1,0 +1,225 @@
+"""The Parallax plan: logical-axis → mesh resolution and the per-parameter
+communication plan (C1 hybrid communication, generalized per DESIGN.md §2).
+
+Every parameter gets a ``ParamPlan`` naming its exchange *method*:
+
+  allreduce    dense, replicated over data/pod (+TP over model where the
+               logical axes say so); gradients ring-all-reduced by XLA.
+               == paper's MPI/NCCL path, cost 2(N-1)b/N.
+  fsdp         dense, additionally sharded over data (ZeRO-3); pull =
+               all-gather before use, push = reduce-scatter.  == paper's PS
+               path applied to a dense parameter, cost 2b.
+  ps           sparse (embedding rows): row-sharded over model ("server
+               shards"); pull = psum of deduped row-buffer (2αb), push =
+               owner-local scatter-add + shard psum over data.  == paper's PS
+               path for sparse parameters.
+  mpi_gatherv  sparse baseline: all-gather of per-replica (ids, rows) +
+               local densify, cost 2(N-1)αb.  == paper's AllGatherv path.
+
+The method is chosen by core/cost_model.py from the Table-3 transfer model;
+``RunConfig.comm_mode`` can force the paper's BASE (ps) / MPI (mpi) baselines.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models.layers import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# logical axis rules
+# ---------------------------------------------------------------------------
+
+def default_rules(mesh: Optional[Mesh], shape_kind: str, batch: int,
+                  dense_strategy: str = "tp") -> dict:
+    """logical axis name -> mesh axes (tuple) or None."""
+    if mesh is None:
+        return {}
+    names = mesh.axis_names
+    has_pod = "pod" in names
+    if dense_strategy == "dp" and shape_kind != "decode":
+        # §Perf iteration B: the model axis joins data parallelism; params
+        # fully sharded (ZeRO-3) and gathered per layer. No TP, no SP.
+        batch_axes = ("pod", "data", "model") if has_pod else ("data", "model")
+        ba = list(batch_axes)
+        while ba and batch % math.prod(mesh.shape[a] for a in ba) != 0:
+            ba.pop(0)
+        rules = {k: None for k in (
+            "seq_sp", "vocab", "embed", "q_heads", "kv_heads", "heads_hd",
+            "mlp", "experts", "moe_mlp", "layers", "state", "lstm_hidden",
+            "conv")}
+        rules["batch"] = tuple(ba) if ba else None
+        rules["kv_seq"] = ("model",)
+        return rules
+    batch_axes = ("pod", "data") if has_pod else ("data",)
+    # batch must divide the data(+pod) axes; drop axes until it does
+    ba = list(batch_axes)
+    while ba and batch % math.prod(mesh.shape[a] for a in ba) != 0:
+        ba.pop(0)
+    rules = {
+        "batch": tuple(ba) if ba else None,
+        "seq_sp": ("model",),          # sequence-parallel residual stream
+        "vocab": ("model",),           # PS server shards (row-sharded)
+        "embed": None,
+        "q_heads": ("model",),
+        "kv_heads": None,              # replicated: TP > n_kv  (DESIGN.md)
+        "heads_hd": ("model",),        # flattened q_heads*head_dim rows
+        "mlp": ("model",),
+        "experts": ("model",),
+        "moe_mlp": None,               # expert d_ff when experts are sharded
+        "kv_seq": ("model",),          # decode cache sequence dim
+        "layers": None,
+        "state": None,
+        "lstm_hidden": ("model",),
+        "conv": None,
+    }
+    if shape_kind == "decode" and (not ba):
+        # tiny-batch decode (long_500k): spread the cache over every axis
+        rules["kv_seq"] = tuple(a for a in ("pod", "data", "model") if a in names)
+    return rules
+
+
+@dataclass
+class MeshRules:
+    mesh: Optional[Mesh]
+    rules: dict
+
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+        ax = self.rules.get(logical)
+        if ax is None:
+            return 1
+        return math.prod(self.mesh.shape[a] for a in ax)
+
+    def pspec(self, axes: tuple, shape: Optional[tuple] = None) -> P:
+        """Resolve logical axes to a PartitionSpec with divisibility checks."""
+        if self.mesh is None:
+            return P()
+        used: set[str] = set()
+        out = []
+        for i, name in enumerate(axes):
+            entry = None
+            if name is not None:
+                cand = self.rules.get(name)
+                if cand:
+                    cand = tuple(a for a in cand if a not in used)
+                    if cand:
+                        size = math.prod(self.mesh.shape[a] for a in cand)
+                        if shape is None or shape[i] % size == 0:
+                            entry = cand
+                            used.update(cand)
+            out.append(entry)
+        return P(*out)
+
+    def sharding(self, axes: tuple, shape: Optional[tuple] = None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(axes, shape))
+
+
+# ---------------------------------------------------------------------------
+# per-parameter plan
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ParamPlan:
+    name: str
+    method: str                        # allreduce | fsdp | ps | mpi_gatherv
+    pspec: P
+    opt_pspec: P                       # optimizer-state sharding (ZeRO-1/3)
+    wire_dtype: Any
+    sparse: bool
+    bytes: int
+    est_cost: dict = field(default_factory=dict)
+
+
+@dataclass
+class Plan:
+    model_cfg: ModelConfig
+    run_cfg: RunConfig
+    shape_cfg: ShapeConfig
+    mesh: Optional[Mesh]
+    rules: MeshRules
+    params: Any = None                 # tree of ParamPlan (aligned with specs)
+    alpha: float = 1.0                 # estimated sparse-access ratio
+    capacity: int = 0                  # sparse-exchange row capacity per replica
+    zero_stage: int = 0
+    embed_method: str = "ps"           # exchange method for sparse embeddings
+
+    # ---- totals for Table-1 style census ----
+    def census(self) -> dict:
+        dense = sparse = 0
+        for p in jax.tree.leaves(self.params, is_leaf=lambda x: isinstance(x, ParamPlan)):
+            if p.sparse:
+                sparse += p.bytes
+            else:
+                dense += p.bytes
+        return {"dense_bytes": dense, "sparse_bytes": sparse, "alpha": self.alpha}
+
+    def methods(self) -> dict:
+        out: dict[str, int] = {}
+        for p in jax.tree.leaves(self.params, is_leaf=lambda x: isinstance(x, ParamPlan)):
+            out[p.method] = out.get(p.method, 0) + 1
+        return out
+
+
+def _fsdp_axes(mesh: Mesh, dense_strategy: str = "tp") -> tuple:
+    axes = ("data", "model") if dense_strategy == "dp" else ("data",)
+    return tuple(a for a in axes if a in mesh.axis_names)
+
+
+def add_fsdp(pspec: P, shape: tuple, mesh: Mesh,
+             dense_strategy: str = "tp") -> P:
+    """ZeRO-3: additionally shard the largest free dim over the data axis."""
+    fax = _fsdp_axes(mesh, dense_strategy)
+    if not fax:
+        return pspec
+    size = math.prod(mesh.shape[a] for a in fax)
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    used = {a for e in entries if e for a in ((e,) if isinstance(e, str) else e)}
+    if any(a in used for a in fax):
+        return pspec
+    # pick the largest unsharded, divisible dim
+    best, best_dim = None, -1
+    for i, (e, d) in enumerate(zip(entries, shape)):
+        if e is None and d % size == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best is None:
+        return pspec
+    entries[best] = fax if len(fax) > 1 else fax[0]
+    return P(*entries)
+
+
+def per_device_bytes(specs: Any, rules: MeshRules, plans: Any, dtype_bytes: int = 2,
+                     opt_bytes: int = 8) -> float:
+    """Rough params+optimizer per-chip bytes under the plan (for escalation)."""
+    total = 0.0
+    for spec, plan in zip(
+        jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec)),
+        jax.tree.leaves(plans, is_leaf=lambda x: isinstance(x, ParamPlan)),
+    ):
+        n = math.prod(spec.shape)
+        shards = _pspec_shards(plan.pspec, rules.mesh)
+        opt_shards = _pspec_shards(plan.opt_pspec, rules.mesh)
+        total += n * dtype_bytes / shards + n * opt_bytes / opt_shards
+    return total
+
+
+def _pspec_shards(pspec: P, mesh: Optional[Mesh]) -> int:
+    if mesh is None:
+        return 1
+    s = 1
+    for e in pspec:
+        if e is None:
+            continue
+        for a in (e,) if isinstance(e, str) else e:
+            s *= mesh.shape[a]
+    return s

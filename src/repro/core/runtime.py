@@ -1,0 +1,130 @@
+"""Runtime handle threaded through model code: mesh, rules, plan, dtypes.
+
+Models never hard-code mesh axes — they name *logical* axes and the runtime
+resolves them (or no-ops on a single device, so the same model code runs in
+unit tests, smoke tests, and the 512-chip dry-run).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core.plan import MeshRules, Plan, default_rules
+from repro.core.embedding import EmbedCtx
+
+
+@dataclass
+class Runtime:
+    model_cfg: ModelConfig
+    run_cfg: RunConfig
+    shape_cfg: ShapeConfig
+    mesh: Optional[Mesh] = None
+    rules: MeshRules = None
+    plan: Optional[Plan] = None
+
+    def __post_init__(self):
+        strategy = self.run_cfg.dense_strategy
+        if strategy == "auto" and self.mesh is not None:
+            from repro.core.cost_model import MeshDims, pick_dense_strategy
+            names = self.mesh.axis_names
+            dims = MeshDims(
+                model=self.mesh.shape["model"] if "model" in names else 1,
+                data=self.mesh.shape["data"] if "data" in names else 1,
+                pod=self.mesh.shape["pod"] if "pod" in names else 1)
+            strategy = pick_dense_strategy(self.model_cfg, self.shape_cfg,
+                                           dims)
+        elif strategy == "auto":
+            strategy = "tp"
+        self.resolved_strategy = strategy
+        if self.rules is None:
+            self.rules = MeshRules(
+                self.mesh,
+                default_rules(self.mesh, self.shape_cfg.kind,
+                              self.shape_cfg.global_batch, strategy),
+            )
+
+    # ---- dtypes ----
+    @property
+    def dtype(self):
+        return jnp.dtype(self.run_cfg.compute_dtype)
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.run_cfg.param_dtype)
+
+    @property
+    def wire_dtype(self):
+        # OPSW: cast to the cheap wire dtype before collectives; baseline f32
+        return jnp.dtype(self.run_cfg.wire_dtype) if self.run_cfg.opsw else jnp.float32
+
+    # ---- mesh helpers ----
+    @property
+    def batch_axes(self) -> tuple:
+        if self.mesh is None:
+            return ()
+        r = self.rules.rules.get("batch")
+        return r or ()
+
+    @property
+    def model_shards(self) -> int:
+        return max(self.rules.axis_size("vocab"),
+                   self.rules.axis_size("mlp"))
+
+    @property
+    def replicas(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def constrain(self, x, axes: tuple):
+        """with_sharding_constraint by logical axes (no-op off-mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.rules.pspec(axes, x.shape)))
+
+    def pad_heads(self, h: int) -> int:
+        shards = self.rules.axis_size("q_heads")
+        return ((h + shards - 1) // shards) * shards
+
+    @property
+    def padded_vocab(self) -> int:
+        shards = max(self.model_shards, 1)
+        v = self.model_cfg.vocab_size
+        return ((v + shards - 1) // shards) * shards
+
+    # ---- the Parallax sparse path ----
+    def embed_ctx(self) -> EmbedCtx:
+        method = "dense"
+        if self.plan is not None:
+            method = self.plan.embed_method
+        elif self.mesh is not None:
+            method = "ps" if self.run_cfg.comm_mode in ("hybrid", "ps") else "mpi_gatherv"
+        return EmbedCtx(
+            mesh=self.mesh,
+            method=method,
+            batch_axes=self.batch_axes,
+            model_axis="model" if (self.mesh and "model" in self.mesh.axis_names) else "",
+            vocab_padded=self.padded_vocab,
+            wire_dtype=self.wire_dtype,
+            local_agg=self.run_cfg.local_agg,
+            exact=self.run_cfg.capacity_mode == "exact",
+        )
+
+    @property
+    def embed_capacity(self) -> int:
+        if self.plan is not None and self.plan.capacity:
+            return self.plan.capacity
+        # exact fallback: local token count
+        toks = self.shape_cfg.tokens // max(self.replicas, 1)
+        if self.shape_cfg.kind == "decode":
+            toks = max(self.shape_cfg.global_batch // max(self.replicas, 1), 1)
+        return max(min(toks, self.padded_vocab), 8)

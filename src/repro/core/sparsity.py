@@ -1,0 +1,71 @@
+"""Parameter sparsity census (paper §3.2 / Table 1 analogue).
+
+The paper defines sparsity α as "the average ratio of activated parameters
+over all parameters" per iteration. In the TF version Parallax classifies a
+parameter as sparse if its gradient is an IndexedSlices (i.e. the parameter
+is only read through integer gathers). Here the classification is carried by
+``ParamSpec.sparse`` (declared where the embedding is built — the JAX
+analogue of the auto-diff tap), and α is *estimated* from the workload:
+
+  α ≈ E[#unique ids per replica-step] / vocab_rows
+
+with the expected-unique count under a uniform-draw upper bound
+``V·(1 - (1-1/V)^T)`` (exact for uniform ids; an upper bound on duplicates
+for any distribution, i.e. a conservative capacity).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+
+from repro.models.layers import ParamSpec
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+
+
+def expected_unique(tokens: int, vocab: int) -> float:
+    """E[#unique] for `tokens` uniform draws from `vocab` rows."""
+    if tokens <= 0 or vocab <= 0:
+        return 0.0
+    return vocab * (1.0 - math.exp(tokens * math.log1p(-1.0 / vocab)))
+
+
+@dataclass
+class Census:
+    dense_params: int
+    sparse_params: int
+    alpha: float               # per-replica activated fraction of sparse rows
+    local_tokens: int
+    capacity: int              # static sparse-exchange buffer rows
+
+
+def run_census(specs: Any, model_cfg: ModelConfig, shape_cfg: ShapeConfig,
+               run_cfg: RunConfig, replicas: int) -> Census:
+    dense = sparse = 0
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec)):
+        n = math.prod(s.shape)
+        if s.sparse:
+            sparse += n
+        else:
+            dense += n
+    if shape_cfg.kind == "train":
+        local_tokens = shape_cfg.tokens // max(replicas, 1)
+    elif shape_cfg.kind == "prefill":
+        local_tokens = shape_cfg.tokens // max(replicas, 1)
+    else:  # decode: one token per sequence per step
+        local_tokens = max(shape_cfg.global_batch // max(replicas, 1), 1)
+    vocab = model_cfg.vocab_size
+    if run_cfg.sparsity_alpha is not None:
+        alpha = run_cfg.sparsity_alpha
+        uniq = alpha * vocab
+    else:
+        uniq = expected_unique(local_tokens, vocab)
+        alpha = uniq / vocab if vocab else 0.0
+    if run_cfg.capacity_mode == "exact":
+        capacity = min(local_tokens, vocab)
+    else:
+        capacity = min(int(math.ceil(uniq * run_cfg.capacity_factor)), local_tokens, vocab)
+    capacity = max(capacity, 8)
+    return Census(dense, sparse, alpha, local_tokens, capacity)

@@ -1,0 +1,259 @@
+"""Automatic graph transformation (paper §5) — the Parallax API.
+
+``analyze``   runs the sparsity census + Table-3 cost model and produces a
+              Plan: per-parameter exchange method, shardings (incl. ZeRO
+              escalation under the per-chip memory budget), sparse-exchange
+              capacities.
+``make_train_step`` / ``make_decode_step``
+              build the distributed jit-ready step functions with
+              in/out shardings derived from the plan. The correctness
+              contract (paper §3.1): the distributed step computes exactly
+              what the single-device step computes at equal global batch —
+              asserted by tests/test_transform.py.
+``get_runner`` the user-facing two-line API (paper Table 2 analogue).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core import cost_model, sparsity
+from repro.core.plan import (MeshRules, ParamPlan, Plan, add_fsdp,
+                             default_rules, per_device_bytes, _pspec_shards)
+from repro.core.runtime import Runtime
+from repro.models.layers import ParamSpec
+from repro.models.model import Model, build_model
+from repro.optim.optimizer import Optimizer, TrainState, make_optimizer
+from repro.utils.tree import named_leaves
+from repro.utils.roofline import HW
+
+
+def _mesh_dims(mesh: Optional[Mesh], rules: MeshRules) -> cost_model.MeshDims:
+    if mesh is None:
+        return cost_model.MeshDims()
+    get = lambda a: mesh.shape.get(a, 1) if hasattr(mesh.shape, "get") else \
+        (mesh.shape[a] if a in mesh.axis_names else 1)
+    return cost_model.MeshDims(
+        model=get("model") if "model" in mesh.axis_names else 1,
+        data=get("data") if "data" in mesh.axis_names else 1,
+        pod=get("pod") if "pod" in mesh.axis_names else 1,
+    )
+
+
+def analyze(model: Model, rt: Runtime,
+            memory_budget: float = 0.9 * HW.hbm_bytes) -> Plan:
+    """Sparsity census + cost model -> Plan (the paper's analysis phase)."""
+    specs = model.specs()
+    dims = _mesh_dims(rt.mesh, rt.rules)
+    census = sparsity.run_census(specs, rt.model_cfg, rt.shape_cfg,
+                                 rt.run_cfg, dims.replicas)
+    comm_mode = rt.run_cfg.comm_mode
+    embed_method = "dense"
+
+    can_shard_rows = rt.rules.axis_size("vocab") > 1
+    strategy = getattr(rt, "resolved_strategy", rt.run_cfg.dense_strategy)
+
+    def plan_leaf(name: str, spec: ParamSpec) -> ParamPlan:
+        nonlocal embed_method
+        b = math.prod(spec.shape) * jnp.dtype(rt.param_dtype).itemsize
+        method, costs = cost_model.choose_method(
+            b=b, sparse=spec.sparse, alpha=census.alpha, dims=dims,
+            comm_mode=comm_mode, can_shard_rows=can_shard_rows)
+        pspec = rt.rules.pspec(spec.axes, spec.shape)
+        if spec.sparse:
+            embed_method = method if rt.mesh is not None else "dense"
+            if method in ("mpi_gatherv", "allreduce"):
+                # table replicated (paper's MPI baseline / dense-AR pick)
+                pspec = P(*([None] * len(spec.shape)))
+        if method == "fsdp" and rt.mesh is not None:
+            pspec = add_fsdp(pspec, spec.shape, rt.mesh, strategy)
+        opt_pspec = pspec
+        if rt.run_cfg.zero_stage >= 1 and rt.mesh is not None and not spec.sparse:
+            opt_pspec = add_fsdp(pspec, spec.shape, rt.mesh, strategy)
+        return ParamPlan(name=name, method=method, pspec=pspec,
+                         opt_pspec=opt_pspec, wire_dtype=rt.wire_dtype,
+                         sparse=spec.sparse, bytes=int(b), est_cost=costs)
+
+    plans = jax.tree_util.tree_map_with_path(
+        lambda path, s: plan_leaf(
+            ".".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path), s),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    plan = Plan(model_cfg=rt.model_cfg, run_cfg=rt.run_cfg,
+                shape_cfg=rt.shape_cfg, mesh=rt.mesh, rules=rt.rules,
+                params=plans, alpha=census.alpha, capacity=census.capacity,
+                zero_stage=rt.run_cfg.zero_stage, embed_method=embed_method)
+
+    # ---- memory escalation: replicate -> ZeRO-1 -> ZeRO-3 (auto-PS) ----
+    if rt.mesh is not None:
+        for stage in (rt.run_cfg.zero_stage, 1, 3):
+            bytes_est = per_device_bytes(specs, rt.rules, plan.params)
+            if bytes_est <= memory_budget:
+                break
+            plan = _escalate(plan, specs, rt, stage if stage else 1)
+        plan.zero_stage = max(plan.zero_stage, 0)
+    return plan
+
+
+def _escalate(plan: Plan, specs, rt: Runtime, stage: int) -> Plan:
+    """Raise the ZeRO stage: shard optimizer state (1) then params (3)."""
+    strategy = getattr(rt, "resolved_strategy", rt.run_cfg.dense_strategy)
+
+    def esc(spec: ParamSpec, p: ParamPlan) -> ParamPlan:
+        if spec.sparse:
+            return p
+        new = p
+        opt = add_fsdp(p.pspec, spec.shape, rt.mesh, strategy)
+        new = replace(new, opt_pspec=opt)
+        if stage >= 3 and p.method == "allreduce":
+            new = replace(new, method="fsdp",
+                          pspec=add_fsdp(p.pspec, spec.shape, rt.mesh, strategy),
+                          opt_pspec=add_fsdp(p.pspec, spec.shape, rt.mesh,
+                                             strategy))
+        return new
+
+    new_params = jax.tree.map(
+        esc, specs, plan.params,
+        is_leaf=lambda x: isinstance(x, (ParamSpec, ParamPlan)))
+    plan.params = new_params
+    plan.zero_stage = stage
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# shardings for state / batch
+# ---------------------------------------------------------------------------
+
+def _ns(mesh, pspec):
+    return NamedSharding(mesh, pspec)
+
+
+def param_shardings(plan: Plan):
+    if plan.mesh is None:
+        return None
+    return jax.tree.map(lambda p: _ns(plan.mesh, p.pspec), plan.params,
+                        is_leaf=lambda x: isinstance(x, ParamPlan))
+
+
+def opt_shardings(plan: Plan):
+    if plan.mesh is None:
+        return None
+    return jax.tree.map(lambda p: _ns(plan.mesh, p.opt_pspec), plan.params,
+                        is_leaf=lambda x: isinstance(x, ParamPlan))
+
+
+def state_shardings(plan: Plan, state_like: TrainState):
+    """TrainState shardings (moments follow opt_pspec; ema follows param)."""
+    if plan.mesh is None:
+        return None
+    ps = param_shardings(plan)
+    os = opt_shardings(plan)
+    rep = _ns(plan.mesh, P())
+    return TrainState(
+        step=rep,
+        params=ps,
+        m=os if state_like.m is not None else None,
+        v=os if state_like.v is not None else None,
+        ema=ps if state_like.ema is not None else None,
+    )
+
+
+def batch_shardings(plan: Plan, batch_specs: dict):
+    if plan.mesh is None:
+        return None
+    ba = plan.rules.rules.get("batch")
+    out = {}
+    for k, v in batch_specs.items():
+        spec = [ba] + [None] * (len(v.shape) - 1) if len(v.shape) else []
+        out[k] = _ns(plan.mesh, P(*spec))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, optimizer: Optimizer, rt: Runtime,
+                    plan: Plan) -> Callable:
+    """(state, batch) -> (state, metrics); grads flow through the plan."""
+
+    def train_step(state: TrainState, batch: dict):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(state.params, batch)
+        # OPSW: dense grads ride collectives at the wire dtype. In global
+        # semantics the aggregation psum is XLA-inserted at the dtype the
+        # gradient tensors carry — so cast before the constraint boundary.
+        if rt.run_cfg.opsw:
+            grads = jax.tree.map(
+                lambda g: g.astype(rt.wire_dtype)
+                if g.dtype == jnp.float32 else g, grads)
+        new_state, opt_metrics = optimizer.update(state, grads)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step
+
+
+def make_decode_step(model: Model, rt: Runtime, plan: Plan) -> Callable:
+    def decode_step(params, cache, tokens, cache_len):
+        logits, new_cache = model.decode_fn(params, cache, tokens, cache_len)
+        return logits, new_cache
+    return decode_step
+
+
+def make_prefill_step(model: Model, rt: Runtime, plan: Plan) -> Callable:
+    def prefill_step(params, batch):
+        logits, cache, _ = model.prefill_fn(params, batch)
+        return logits, cache
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# the two-line user API (paper Table 2)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Runner:
+    model: Model
+    optimizer: Optimizer
+    plan: Plan
+    rt: Runtime
+    train_step: Callable          # jitted
+    state: TrainState
+
+    def run(self, batch) -> dict:
+        self.state, metrics = self.train_step(self.state, batch)
+        return metrics
+
+
+def get_runner(model_cfg: ModelConfig, shape_cfg: ShapeConfig,
+               run_cfg: RunConfig = RunConfig(),
+               mesh: Optional[Mesh] = None, seed: int = 0) -> Runner:
+    """Transform a single-device model into a distributed runner."""
+    rt = Runtime(model_cfg, run_cfg, shape_cfg, mesh=mesh)
+    model = build_model(model_cfg, rt)
+    plan = analyze(model, rt)
+    rt.plan = plan
+    optimizer = make_optimizer(rt)
+    step = make_train_step(model, optimizer, rt, plan)
+
+    params = model.init(jax.random.key(seed))
+    state = optimizer.init(params)
+    if mesh is not None:
+        shardings = state_shardings(plan, state)
+        state = jax.device_put(state, shardings)
+        bs = batch_shardings(plan, model.input_specs())
+        step = jax.jit(step, in_shardings=(shardings, bs),
+                       out_shardings=(shardings, None), donate_argnums=0)
+    else:
+        step = jax.jit(step, donate_argnums=0)
+    return Runner(model=model, optimizer=optimizer, plan=plan, rt=rt,
+                  train_step=step, state=state)

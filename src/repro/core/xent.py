@@ -1,0 +1,63 @@
+"""Vocab-sharded softmax cross-entropy.
+
+Logits live sharded over the ``model`` axis (the output head is row-sharded
+like the PS embedding); the loss never materializes a replicated (B,S,V)
+tensor. Only scalars-per-token cross shards (psum of max/denominator/target
+logit) — this is the paper's OPAU placement discipline applied to the loss:
+shared ops see partial reductions, not gathered tensors.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _xent_local(logits, labels, *, model_axis: str, vocab: int, shards: int):
+    """Per-device body: logits (B,S,Vloc) f32, labels (B,S) global ids."""
+    vloc = logits.shape[-1]
+    m = jax.lax.axis_index(model_axis) if shards > 1 else 0
+    col0 = m * vloc
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    logits = jnp.where(cols < vocab, logits, -jnp.inf)
+
+    mx = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+    if shards > 1:
+        mx = jax.lax.pmax(mx, model_axis)
+    se = jnp.sum(jnp.exp(logits - mx[..., None]), axis=-1)
+    if shards > 1:
+        se = jax.lax.psum(se, model_axis)
+    lse = jnp.log(se) + mx
+
+    local_lab = labels - col0
+    owned = (local_lab >= 0) & (local_lab < vloc)
+    tgt = jnp.take_along_axis(
+        logits, jnp.clip(local_lab, 0, vloc - 1)[..., None], axis=-1)[..., 0]
+    tgt = jnp.where(owned, tgt, 0.0)
+    if shards > 1:
+        tgt = jax.lax.psum(tgt, model_axis)
+    return lse - tgt
+
+
+def sharded_xent(logits: jax.Array, labels: jax.Array, *,
+                 mesh: Optional[Mesh], model_axis: str, batch_axes: tuple,
+                 vocab: int) -> jax.Array:
+    """Per-token loss (B,S). logits (B,S,Vp) vocab-sharded over model."""
+    logits = logits.astype(jnp.float32)
+    if mesh is None or model_axis not in mesh.axis_names \
+            or mesh.shape[model_axis] == 1 or model_axis in (batch_axes or ()):
+        # vocab not sharded (dp strategy: the model axis carries batch) —
+        # plain local xent; GSPMD shards it over the batch dims
+        return _xent_local(logits, labels, model_axis="", vocab=vocab, shards=1)
+    shards = mesh.shape[model_axis]
+    fn = jax.shard_map(
+        lambda lg, lb: _xent_local(lg, lb, model_axis=model_axis,
+                                   vocab=vocab, shards=shards),
+        mesh=mesh,
+        in_specs=(P(batch_axes or None, None, model_axis), P(batch_axes or None, None)),
+        out_specs=P(batch_axes or None, None),
+        check_vma=False,
+    )
+    return fn(logits, labels)

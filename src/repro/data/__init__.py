@@ -1,0 +1,3 @@
+from repro.data.pipeline import (
+    SyntheticLM, Dataset, shard, make_batch_specs,
+)

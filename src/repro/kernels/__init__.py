@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical hot-spots, each with a pure-jnp
+oracle in ref.py and an interpret=True correctness sweep in tests/.
+
+  flash_attention  blocked online-softmax attention (train/prefill)
+  embed_gather     PS server-side sparse row pull (scalar-prefetch gather)
+  wkv              RWKV6 chunked linear-attention recurrence
+"""
+from repro.kernels import ops  # noqa: F401

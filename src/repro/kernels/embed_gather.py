@@ -1,0 +1,51 @@
+"""PS server-side pull as a Pallas TPU kernel (the sparse hot-spot).
+
+Gathers the deduped rows a replica requested from this shard's slice of the
+embedding table, zeroing rows owned by other shards. The row ids ride in
+scalar-prefetch memory (SMEM) and drive the table BlockSpec's index_map —
+the canonical TPU embedding-gather schedule: one (rows_per_step × E) DMA
+from HBM per grid step, no host gather, no full-table traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(ids_ref, table_ref, out_ref, *, row_offset: int,
+                   vs: int, n_ids: int):
+    i = pl.program_id(0)
+    gid = ids_ref[i]
+    local = gid - row_offset
+    owned = jnp.logical_and(local >= 0, local < vs)
+    row = table_ref[0]                               # (E,) block picked by index_map
+    out_ref[0] = jnp.where(owned, row, 0).astype(out_ref.dtype)
+
+
+def embed_gather(table_shard: jax.Array, ids: jax.Array, row_offset: int,
+                 *, interpret: bool = False) -> jax.Array:
+    """table_shard: (Vs, E); ids: (N,) global ids -> (N, E) owned rows."""
+    vs, e = table_shard.shape
+    n = ids.shape[0]
+
+    def table_index(i, ids_ref):
+        local = ids_ref[i] - row_offset
+        return (jnp.clip(local, 0, vs - 1), 0)
+
+    kernel = functools.partial(_gather_kernel, row_offset=row_offset,
+                               vs=vs, n_ids=n)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[pl.BlockSpec((1, e), table_index)],
+            out_specs=pl.BlockSpec((1, e), lambda i, ids_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, e), table_shard.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table_shard)

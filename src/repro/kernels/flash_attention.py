@@ -1,0 +1,110 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Grid: (batch*heads, q_blocks, kv_blocks) with the KV dimension innermost and
+``arbitrary`` (sequential) semantics — the fp32 (m, l, acc) accumulators live
+in VMEM scratch and persist across KV iterations, exactly the TPU-native
+online-softmax schedule. Block shapes are MXU-aligned (multiples of 128 on
+the matmul dims; head_dim rides whole).
+
+VMEM budget per step (bf16, bq=bk=128, d=128):
+  q (128·d) + k,v (128·d) + scratch m,l (128) + acc (128·d) fp32 ≈ 0.2 MB —
+far under the ~16 MB VMEM bound, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, scale: float, bq: int, bk: int,
+                  kv_blocks: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < seq_k
+    if causal:
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        mask = mask & (qpos >= kpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + \
+        jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _flush():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """q/k/v: (B, S, H, D) with kv pre-expanded to H heads. -> (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, max(sq, 8))
+    bk = min(block_k, max(sk, 8))
+    pad_q = (-sq) % bq
+    pad_k = (-sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, q.shape[1], d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * h, k.shape[1], d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * h, v.shape[1], d)
+    q_blocks = qt.shape[1] // bq
+    kv_blocks = kt.shape[1] // bk
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, scale=d ** -0.5, bq=bq, bk=bk,
+        kv_blocks=kv_blocks, seq_k=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, q_blocks, kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # m
+            pltpu.VMEM((bq,), jnp.float32),      # l
+            pltpu.VMEM((bq, d), jnp.float32),    # acc
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.reshape(b, h, -1, d).transpose(0, 2, 1, 3)
+    return out[:, :sq]

@@ -1,0 +1,43 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On the CPU container the kernels run in interpret mode (correctness path);
+on TPU (the target) they compile to Mosaic. ``REPRO_PALLAS_INTERPRET=0``
+forces compiled mode.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import embed_gather as _eg
+from repro.kernels import wkv as _wkv
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("row_offset",))
+def embed_gather(table_shard, ids, row_offset: int = 0):
+    return _eg.embed_gather(table_shard, ids, row_offset,
+                            interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv(r, k, v, lw, bonus, state, *, chunk: int = 32):
+    return _wkv.wkv(r, k, v, lw, bonus, state, chunk=chunk,
+                    interpret=_interpret())

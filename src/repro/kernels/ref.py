@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q: (B,S,H,D); k/v: (B,S,H,D) (kv pre-expanded). fp32 internal."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def embed_gather_ref(table_shard, ids, row_offset: int) -> jax.Array:
+    """Server-side pull: rows of global `ids` owned by this shard, zeros
+    elsewhere. table_shard: (Vs, E); ids: (N,)."""
+    vs = table_shard.shape[0]
+    local = ids - row_offset
+    owned = (local >= 0) & (local < vs)
+    rows = jnp.take(table_shard, jnp.clip(local, 0, vs - 1), axis=0)
+    return jnp.where(owned[:, None], rows, 0)
+
+
+def wkv_ref(r, k, v, lw, bonus, state) -> tuple[jax.Array, jax.Array]:
+    """RWKV6 WKV, sequential oracle.
+
+    r/k/v/lw: (B,S,H,E); bonus: (H,E); state: (B,H,E,E) [key x value].
+    out[t] = r_t·(state + u⊙k_t v_t^T); state = diag(exp(lw_t))state + k_t v_t^T
+    """
+    b, s, h, e = r.shape
+
+    def step(st, t):
+        rt, kt, vt, lwt = r[:, t], k[:, t], v[:, t], lw[:, t]
+        rt, kt, vt = (x.astype(jnp.float32) for x in (rt, kt, vt))
+        lwt = lwt.astype(jnp.float32)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out_t = jnp.einsum("bhk,bhkv->bhv", rt, st + bonus[None, :, :, None] * kv)
+        st = st * jnp.exp(lwt)[..., None] + kv
+        return st, out_t
+
+    state, outs = jax.lax.scan(step, state.astype(jnp.float32),
+                               jnp.arange(s))
+    return outs.transpose(1, 0, 2, 3).astype(r.dtype), state

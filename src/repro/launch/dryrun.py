@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape) on the 16x16 production mesh and the 2x16x16
+multi-pod mesh, record memory/cost/collective analysis for §Roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-medium-14b \
+      --shape train_4k [--multi-pod] [--comm-mode hybrid] [--out results/]
+  PYTHONPATH=src python -m repro.launch.dryrun --sweep   # all cells
+"""
+import argparse
+import json
+import time
+import traceback
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (RunConfig, SHAPES, ALL_ARCHS, get_config,
+                           shapes_for)
+from repro.core.runtime import Runtime
+from repro.core.transform import (analyze, batch_shardings, make_train_step,
+                                  make_decode_step, make_prefill_step,
+                                  state_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.optim.optimizer import make_optimizer, TrainState
+from repro.utils.hlo import analyze_hlo
+from repro.utils.roofline import roofline_from_analysis, HW
+from repro.utils.traffic import estimate_traffic
+from repro.utils.tree import tree_bytes
+
+
+def _abstract_state(model, optimizer):
+    params = model.abstract_params()
+    return jax.eval_shape(optimizer.init, params)
+
+
+def _ns_tree(mesh, pspec_tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               run_cfg: RunConfig):
+    """Build + lower + compile one cell. Returns (compiled, rt, plan, meta)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rt = Runtime(cfg, run_cfg, shape, mesh=mesh)
+    model = build_model(cfg, rt)
+    plan = analyze(model, rt)
+    rt.plan = plan
+    optimizer = make_optimizer(rt)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            step = make_train_step(model, optimizer, rt, plan)
+            state = _abstract_state(model, optimizer)
+            sh = state_shardings(plan, state)
+            bs = batch_shardings(plan, model.input_specs(shape))
+            lowered = jax.jit(step, in_shardings=(sh, bs),
+                              out_shardings=(sh, None),
+                              donate_argnums=0).lower(
+                state, model.input_specs(shape))
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model, rt, plan)
+            from repro.core.transform import param_shardings
+            psh = param_shardings(plan)
+            bs = batch_shardings(plan, model.input_specs(shape))
+            lowered = jax.jit(step, in_shardings=(psh, bs)).lower(
+                model.abstract_params(), model.input_specs(shape))
+        else:  # decode
+            step = make_decode_step(model, rt, plan)
+            from repro.core.transform import param_shardings
+            psh = param_shardings(plan)
+            cache = model.abstract_cache(shape)
+            cps = model.cache_pspecs()
+            csh = _ns_tree(mesh, cps) if cps is not None else None
+            ba = rt.rules.rules.get("batch")
+            tok_sh = NamedSharding(mesh, P(ba, None))
+            len_sh = NamedSharding(mesh, P())
+            lowered = jax.jit(
+                step, in_shardings=(psh, csh, tok_sh, len_sh),
+                out_shardings=(None, csh), donate_argnums=1).lower(
+                model.abstract_params(), cache,
+                jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+                jax.ShapeDtypeStruct((), jnp.int32))
+        compiled = lowered.compile()
+    return compiled, rt, plan, model
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             run_cfg: RunConfig = None, verbose: bool = True) -> dict:
+    run_cfg = run_cfg or RunConfig()
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+    try:
+        compiled, rt, plan, model = lower_cell(
+            arch, shape_name, multi_pod=multi_pod, run_cfg=run_cfg)
+    except Exception as e:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "ok": False, "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:]}
+    compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    cfg = get_config(arch)
+    hlo = analyze_hlo(compiled.as_text(),
+                      f32_collective_scale=0.5 if run_cfg.opsw else 1.0)
+
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if cfg.is_encdec and cfg.enc_layers:
+        # encoder layers process seq/enc_ratio frames, not the full tokens
+        from repro.models.encdec import enc_ratio
+        L = cfg.n_layers + cfg.enc_layers
+        enc_share = cfg.enc_layers / L
+        n_active = n_active * (1 - enc_share + enc_share / enc_ratio(cfg))
+    if shape.kind == "train":
+        tokens = shape.tokens
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.tokens
+        model_flops = 2.0 * n_active * tokens
+    else:
+        tokens = shape.global_batch
+        model_flops = 2.0 * n_active * tokens
+
+    peak_mem = (mem.argument_size_in_bytes + mem.temp_size_in_bytes +
+                mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    traffic = estimate_traffic(
+        cfg, shape, chips=chips, model_shards=rt.model_shards,
+        remat=run_cfg.remat, zero_stage=plan.zero_stage)
+    terms = roofline_from_analysis(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        cost={"flops": hlo.dot_flops, "bytes accessed": traffic.total},
+        collective_bytes=hlo.collective_bytes,
+        model_flops_global=model_flops,
+        peak_memory=peak_mem,
+        collective_breakdown=hlo.collective_by_kind,
+    )
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": True,
+        "chips": chips, "compile_s": compile_s,
+        "memory_analysis": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": peak_mem,
+        },
+        "xla_cost_analysis": {k: cost.get(k) for k in
+                              ("flops", "bytes accessed") if k in cost},
+        "traffic": traffic.to_dict(),
+        "hlo": hlo.to_dict(),
+        "plan": {"alpha": plan.alpha, "capacity": plan.capacity,
+                 "embed_method": plan.embed_method,
+                 "zero_stage": plan.zero_stage,
+                 "methods": plan.methods(),
+                 "census": plan.census()},
+        "roofline": terms.to_dict(),
+        "run_cfg": {"comm_mode": run_cfg.comm_mode,
+                    "local_agg": run_cfg.local_agg,
+                    "opau": run_cfg.opau, "opsw": run_cfg.opsw,
+                    "capacity_mode": run_cfg.capacity_mode,
+                    "remat": run_cfg.remat,
+                    "explicit_sp": run_cfg.explicit_sp,
+                    "dense_strategy": run_cfg.dense_strategy},
+    }
+    if verbose:
+        r = terms
+        print(f"[{arch} × {shape_name} × {mesh_name}] compile {compile_s:.1f}s"
+              f"  peak/chip {peak_mem/1e9:.2f} GB"
+              f"  compute {r.compute_s*1e3:.2f} ms  memory {r.memory_s*1e3:.2f} ms"
+              f"  collective {r.collective_s*1e3:.2f} ms"
+              f"  dominant={r.dominant}  roofline={r.roofline_fraction:.3f}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--comm-mode", default="hybrid")
+    ap.add_argument("--capacity-mode", default="capped")
+    ap.add_argument("--no-local-agg", action="store_true")
+    ap.add_argument("--no-opau", action="store_true")
+    ap.add_argument("--no-opsw", action="store_true")
+    ap.add_argument("--remat", default="block")
+    ap.add_argument("--explicit-sp", action="store_true")
+    ap.add_argument("--dense-strategy", default="tp")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    run_cfg = RunConfig(
+        comm_mode=args.comm_mode, capacity_mode=args.capacity_mode,
+        local_agg=not args.no_local_agg, opau=not args.no_opau,
+        opsw=not args.no_opsw, remat=args.remat,
+        explicit_sp=args.explicit_sp, dense_strategy=args.dense_strategy)
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = []
+    if args.sweep:
+        for arch in ALL_ARCHS:
+            for shape in shapes_for(arch):
+                cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if (args.both_meshes or args.sweep) else \
+        [args.multi_pod]
+    n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            res = run_cell(arch, shape, multi_pod=mp, run_cfg=run_cfg)
+            tag = f"__{args.tag}" if args.tag else ""
+            name = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}{tag}.json"
+            with open(os.path.join(args.out, name), "w") as f:
+                json.dump(res, f, indent=1)
+            if not res["ok"]:
+                n_fail += 1
+                print(f"FAIL [{arch} × {shape} × "
+                      f"{'2x16x16' if mp else '16x16'}]: {res['error']}")
+            jax.clear_caches()  # keep host memory bounded across the sweep
+    print(f"dry-run complete: {len(cells)*len(meshes)-n_fail} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

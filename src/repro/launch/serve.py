@@ -1,0 +1,72 @@
+"""Serving launcher: batched requests against a small model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch phi3-medium-14b \
+      --reduced --requests 16 --max-new 8
+"""
+import argparse
+import os
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-medium-14b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args()
+
+
+ARGS = _parse()
+if ARGS.devices:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={ARGS.devices} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import time  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import RunConfig, get_config, reduced  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.runtime.server import Request, Server, ServerConfig  # noqa: E402
+
+
+def main():
+    args = ARGS
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh = None
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model") if len(dims) == 2 else \
+            ("pod", "data", "model")
+        mesh = make_mesh(dims, axes)
+    rng = np.random.default_rng(args.seed)
+    server = Server(cfg, RunConfig(attention_impl="naive"),
+                    ServerConfig(max_batch=args.max_batch,
+                                 max_seq=args.max_seq), mesh=mesh)
+    for i in range(args.requests):
+        plen = int(rng.integers(2, 9))
+        server.submit(Request(
+            uid=i, prompt=rng.integers(0, cfg.vocab_size, plen,
+                                       dtype=np.int32),
+            max_new_tokens=args.max_new))
+    t0 = time.time()
+    done = server.run_until_drained()
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in done)
+    print(f"served {len(done)} requests, {toks} tokens in {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s)")
+    for r in done[:4]:
+        print(f"  req {r.uid}: prompt {r.prompt.tolist()} -> {r.out_tokens}")
+    assert len(done) == args.requests
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch phi3-medium-14b \
+      --steps 100 --seq 512 --batch 8 [--devices 8 --mesh 2x4] \
+      [--ckpt-dir /tmp/ckpt] [--comm-mode hybrid]
+
+``--devices N`` forces N host platform devices (set before jax import, so
+this module parses argv at import time — launcher-only pattern; library code
+never touches XLA_FLAGS).
+"""
+import argparse
+import os
+import sys
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3-medium-14b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced smoke config of the arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--mesh", default="", help="e.g. 2x4 => data=2,model=4")
+    ap.add_argument("--comm-mode", default="hybrid")
+    ap.add_argument("--no-local-agg", action="store_true")
+    ap.add_argument("--no-opau", action="store_true")
+    ap.add_argument("--no-opsw", action="store_true")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--remat", default="block")
+    ap.add_argument("--attention", default="naive")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args()
+
+
+ARGS = _parse()
+if ARGS.devices:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={ARGS.devices} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import logging  # noqa: E402
+import jax  # noqa: E402
+
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced  # noqa: E402
+from repro.data.pipeline import SyntheticLM  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: E402
+
+
+def main():
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    args = ARGS
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    run_cfg = RunConfig(
+        comm_mode=args.comm_mode, local_agg=not args.no_local_agg,
+        opau=not args.no_opau, opsw=not args.no_opsw,
+        learning_rate=args.lr, remat=args.remat,
+        attention_impl=args.attention, seed=args.seed)
+    mesh = None
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model") if len(dims) == 2 else \
+            ("pod", "data", "model")
+        mesh = make_mesh(dims, axes)
+    ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed,
+                     is_encdec=cfg.is_encdec,
+                     frames_dim=cfg.d_model if cfg.family == "audio" else 0,
+                     frames_len=max(args.seq // 4, 1))
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every,
+                         log_every=args.log_every)
+    trainer = Trainer(cfg, shape, run_cfg, tcfg, ds, mesh=mesh)
+    trainer.maybe_restore()
+
+    import time
+    t0 = time.time()
+
+    def on_metrics(step, m):
+        if step % args.log_every == 0:
+            print(f"step {step:5d}  loss {m.get('loss', float('nan')):.4f}  "
+                  f"{m.get('tokens_per_s', 0):.0f} tok/s  "
+                  f"gnorm {m.get('grad_norm', float('nan')):.3f}")
+
+    trainer.run(on_metrics=on_metrics)
+    dt = time.time() - t0
+    print(f"done: {args.steps} steps in {dt:.1f}s "
+          f"({args.steps * shape.tokens / dt:.0f} tok/s avg)")
+
+
+if __name__ == "__main__":
+    main()

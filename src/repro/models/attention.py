@@ -1,0 +1,162 @@
+"""GQA attention with RoPE.
+
+Implementations:
+  naive    full (S,S) score materialization — small tests only.
+  chunked  online-softmax over KV blocks via lax.scan — the flash-attention
+           *algorithm* in pure XLA ops; memory O(S·C); dry-run default.
+  pallas   kernels/flash_attention.py (TPU target, validated interpret=True).
+
+Sharding (DESIGN.md): q heads padded to the model-axis size and sharded;
+KV heads replicated (TP > n_kv); decode KV cache sequence-sharded over
+``model`` with a psum'd online-softmax combine (flash-decoding).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D). positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def make_qmap(n_heads: int, n_kv: int, padded_heads: int):
+    """q-head -> kv-head index map; padded q heads point at kv 0 (their
+    weights are zero-initialized, so they contribute nothing). Returns None
+    when the map is the identity (MHA, no padding)."""
+    q_per_kv = max(n_heads // max(n_kv, 1), 1)
+    idx = [min(i // q_per_kv, n_kv - 1) if i < n_heads else 0
+           for i in range(padded_heads)]
+    if idx == list(range(padded_heads)):
+        return None
+    return jnp.asarray(idx, jnp.int32)
+
+
+def _expand_kv(k, qmap):
+    """(B,S,KV,D) -> (B,S,H,D) via the q->kv map.
+
+    Implemented as a one-hot einsum, not a gather: the contraction partitions
+    cleanly under SPMD (replicated KV -> head-sharded expansion with zero
+    communication) and its VJP is another einsum — a gather's scatter-add
+    VJP forces involuntary resharding of (B,S,H,D) buffers per KV chunk.
+    """
+    if qmap is None:
+        return k
+    onehot = jax.nn.one_hot(qmap, k.shape[2], dtype=k.dtype)  # (H, KV)
+    return jnp.einsum("bskd,hk->bshd", k, onehot)
+
+
+def naive_attention(q, k, v, *, causal: bool = True,
+                    q_offset: int = 0, qmap=None) -> jax.Array:
+    """q: (B,Sq,H,D), k/v: (B,Sk,KV,D). Returns (B,Sq,H,D)."""
+    kq = _expand_kv(k, qmap)
+    vq = _expand_kv(v, qmap)
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale,
+                        kq.astype(jnp.float32))
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qpos = q_offset + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        scores = jnp.where(qpos >= kpos, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vq.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, chunk: int = 1024,
+                      q_offset: int = 0, qmap=None) -> jax.Array:
+    """Online-softmax attention, scanned over KV chunks (flash algorithm).
+
+    Never materializes more than (B, Sq, H, chunk) of scores.
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    chunk = min(chunk, sk)
+    if sk % chunk != 0:  # pad kv to a chunk multiple (masked out)
+        pad = chunk - sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = k.shape[1] // chunk
+    scale = d ** -0.5
+
+    kc = k.reshape(b, n_chunks, chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kv, d).transpose(1, 0, 2, 3, 4)
+
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    qf = q.astype(jnp.float32) * scale
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        kj = _expand_kv(kj, qmap).astype(jnp.float32)
+        vj = _expand_kv(vj, qmap).astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kj)
+        kpos = j * chunk + jnp.arange(chunk)[None, :]
+        mask = kpos <= (sk - 1)
+        if causal:
+            mask = mask & (qpos >= kpos)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vj)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, qmap=None) -> jax.Array:
+    """One-step attention against a (possibly sequence-sharded) KV cache.
+
+    q: (B,1,H,D); caches: (B,S,KV,D) sharded P(batch, kv_seq, None, None).
+    Written in global semantics — GSPMD partitions the softmax reduction over
+    the sharded cache axis (flash-decoding's psum combine).
+    """
+    kq = _expand_kv(k_cache, qmap).astype(jnp.float32)
+    vq = _expand_kv(v_cache, qmap).astype(jnp.float32)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kq)
+    kpos = jnp.arange(k_cache.shape[1])[None, None, None, :]
+    s = jnp.where(kpos < cache_len, s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vq)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, impl: str = "chunked", causal: bool = True,
+              chunk: int = 1024, q_offset: int = 0, qmap=None) -> jax.Array:
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               qmap=qmap)
+    if impl == "chunked":
+        return chunked_attention(q, k, v, causal=causal, chunk=chunk,
+                                 q_offset=q_offset, qmap=qmap)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(_expand_kv(q, None) if qmap is None else q,
+                                    _expand_kv(k, qmap), _expand_kv(v, qmap),
+                                    causal=causal)
+    raise ValueError(f"unknown attention impl {impl!r}")

@@ -1,0 +1,178 @@
+"""Encoder-decoder backbone (seamless-m4t): transformer encoder over stub
+frame embeddings + causal decoder with cross-attention.
+
+Shapes: the cell's ``seq_len`` is split enc:dec as (seq_len//4, seq_len) —
+audio frames are time-compressed ~4x by the (stubbed) conformer adaptor.
+Decode caches: decoder self-attn KV + per-layer cross-attn KV precomputed
+from the encoder output at prefill time.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding as emb
+from repro.core.xent import sharded_xent
+from repro.models import attention as attn_mod
+from repro.models.layers import ParamSpec, rms_norm, swiglu, stack_tree
+from repro.models.transformer import (
+    attn_specs, mlp_specs, attn_block, rt_residual_axes)
+
+
+def enc_ratio(cfg) -> int:
+    return 4 if cfg.frontend_stub else 1
+
+
+def enc_layer_specs(cfg, rt) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": ParamSpec((d,), (None,), init="ones"),
+        "attn": attn_specs(cfg, rt),
+        "ln2": ParamSpec((d,), (None,), init="ones"),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def dec_layer_specs(cfg, rt) -> dict:
+    d = cfg.d_model
+    s = enc_layer_specs(cfg, rt)
+    s["ln_cross"] = ParamSpec((d,), (None,), init="ones")
+    s["cross"] = attn_specs(cfg, rt)
+    return s
+
+
+def model_specs(cfg, rt) -> dict:
+    d = cfg.d_model
+    vp = rt.padded_vocab
+    return {
+        "embed": ParamSpec((vp, d), ("vocab", "embed"), init="embed", sparse=True),
+        "enc_layers": stack_tree(enc_layer_specs(cfg, rt), cfg.enc_layers),
+        "enc_norm": ParamSpec((d,), (None,), init="ones"),
+        "dec_layers": stack_tree(dec_layer_specs(cfg, rt), cfg.n_layers),
+        "final_norm": ParamSpec((d,), (None,), init="ones"),
+        "head": ParamSpec((vp, d), ("vocab", "embed"), scale=0.02),
+    }
+
+
+def encode(params, frames, *, cfg, rt):
+    """frames: (B, S_enc, D) precomputed frontend embeddings (stub)."""
+    x = frames.astype(rt.dtype)
+    x = rt.constrain(x, rt_residual_axes(rt, x))
+    positions = jnp.arange(x.shape[1])
+
+    def layer(x, p):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, _ = attn_block(p["attn"], h, cfg=cfg, rt=rt, positions=positions,
+                          causal=False)
+        x = rt.constrain(x + a, rt_residual_axes(rt, x))
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        f = swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                   p["mlp"]["w_down"], constrain=rt.constrain)
+        return rt.constrain(x + f, rt_residual_axes(rt, x)), None
+
+    if rt.run_cfg.remat in ("block", "full"):
+        layer = jax.checkpoint(layer)
+    x, _ = jax.lax.scan(layer, x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(p_cross, enc_out, cfg, rt):
+    b, se, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p_cross["wk"]).reshape(b, se, kv, hd)
+    v = (enc_out @ p_cross["wv"]).reshape(b, se, kv, hd)
+    return k, v
+
+
+def decode_stack(params, tokens, enc_out, *, cfg, rt, cache=None,
+                 cache_len=None):
+    """Decoder over text tokens with cross-attention to enc_out (or cached
+    cross KV). Returns (logits, new_cache, metrics)."""
+    b, s = tokens.shape
+    ctx = rt.embed_ctx()
+    x, emetrics = emb.lookup(params["embed"], tokens, ctx=ctx,
+                             capacity=rt.embed_capacity)
+    x = x.astype(rt.dtype)
+    x = rt.constrain(x, rt_residual_axes(rt, x))
+    positions = (cache_len if cache_len is not None else 0) + jnp.arange(s)
+
+    def layer(x, inp):
+        p, layer_cache = inp
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if layer_cache is not None:
+            self_kv = (layer_cache[0], layer_cache[1])
+            cross_k, cross_v = layer_cache[2], layer_cache[3]
+            a, new_self = attn_block(p["attn"], h, cfg=cfg, rt=rt,
+                                     positions=positions,
+                                     layer_cache=self_kv, cache_len=cache_len)
+        else:
+            cross_k, cross_v = _cross_kv(p["cross"], enc_out, cfg, rt)
+            a, new_self = attn_block(p["attn"], h, cfg=cfg, rt=rt,
+                                     positions=positions)
+        x = rt.constrain(x + a, rt_residual_axes(rt, x))
+        h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        c, _ = attn_block(p["cross"], h, cfg=cfg, rt=rt, positions=positions,
+                          cross_kv=(cross_k, cross_v), causal=False)
+        x = rt.constrain(x + c, rt_residual_axes(rt, x))
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        f = swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                   p["mlp"]["w_down"], constrain=rt.constrain)
+        x = rt.constrain(x + f, rt_residual_axes(rt, x))
+        new_cache = (*new_self, cross_k, cross_v) if new_self is not None else None
+        return x, new_cache
+
+    if rt.run_cfg.remat in ("block", "full") and cache is None:
+        layer = jax.checkpoint(layer)
+
+    if cache is not None:
+        x, new_cache = jax.lax.scan(layer, x, (params["dec_layers"], cache))
+    else:
+        x, _ = jax.lax.scan(lambda x, p: layer(x, (p, None)), x,
+                            params["dec_layers"])
+        new_cache = None
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["head"].astype(x.dtype))
+    logits = rt.constrain(logits, ("batch", None, "vocab"))
+    return logits, new_cache, emetrics
+
+
+def forward(params, batch, *, cfg, rt, cache=None, cache_len=None):
+    """Training/prefill forward. batch: {frames, tokens}."""
+    if cache is not None:
+        return decode_stack(params, batch["tokens"], None, cfg=cfg, rt=rt,
+                            cache=cache, cache_len=cache_len)
+    enc_out = encode(params, batch["frames"], cfg=cfg, rt=rt)
+    return decode_stack(params, batch["tokens"], enc_out, cfg=cfg, rt=rt)
+
+
+def init_cache(cfg, rt, batch, cache_seq, enc_seq, dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    one = (jnp.zeros((batch, cache_seq, kv, hd), dtype),
+           jnp.zeros((batch, cache_seq, kv, hd), dtype),
+           jnp.zeros((batch, enc_seq, kv, hd), dtype),
+           jnp.zeros((batch, enc_seq, kv, hd), dtype))
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers, *a.shape)), one)
+
+
+def cache_pspec_tree(cfg, rt):
+    from jax.sharding import PartitionSpec as P
+    if rt.mesh is None:
+        return None
+    batch_axes = rt.rules.rules.get("batch")
+    kv_seq = rt.rules.rules.get("kv_seq")
+    kvspec = P(None, batch_axes, kv_seq, None, None)
+    return (kvspec, kvspec, kvspec, kvspec)
+
+
+def loss_fn(params, batch, *, cfg, rt):
+    logits, _, metrics = forward(params, batch, cfg=cfg, rt=rt)
+    per_tok = sharded_xent(
+        logits, batch["labels"], mesh=rt.mesh, model_axis="model",
+        batch_axes=rt.batch_axes, vocab=cfg.vocab_size)
+    loss = jnp.mean(per_tok)
+    metrics["xent"] = loss
+    return loss, metrics

@@ -1,0 +1,108 @@
+"""Parameter-spec system and basic layers.
+
+Parameters are declared once as ``ParamSpec`` trees with *logical axes*
+(vocab/embed/mlp/q_heads/...); the planner (core/plan.py) resolves logical
+axes to mesh ``PartitionSpec``s with divisibility-checked fallbacks. The same
+spec tree serves initialization (real arrays), the dry-run
+(ShapeDtypeStructs), and the sparsity census (core/sparsity.py).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]          # logical axis names, len == ndim
+    init: str = "normal"                     # normal | zeros | ones | embed
+    scale: Optional[float] = None            # stddev override for normal
+    dtype: Any = None                        # None -> run param dtype
+    sparse: bool = False                     # True: rows accessed via int gather
+    fan_in_axes: tuple[int, ...] = ()        # axes contributing to fan-in
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def dense_spec(d_in: int, d_out: int, axes: tuple, *, scale=None, init="normal"):
+    return ParamSpec((d_in, d_out), axes, init=init, scale=scale, fan_in_axes=(0,))
+
+
+def stacked(spec: ParamSpec, n: int, axis_name: str = "layers") -> ParamSpec:
+    """Add a leading stacked-layers dim for scan-over-layers."""
+    return ParamSpec(
+        (n, *spec.shape), (axis_name, *spec.axes),
+        init=spec.init, scale=spec.scale, dtype=spec.dtype, sparse=spec.sparse,
+        fan_in_axes=tuple(a + 1 for a in spec.fan_in_axes),
+    )
+
+
+def stack_tree(tree: Any, n: int) -> Any:
+    return jax.tree.map(
+        lambda s: stacked(s, n), tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def init_param(key, spec: ParamSpec, default_dtype) -> jax.Array:
+    dtype = spec.dtype or default_dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape, jnp.float32) * 0.02).astype(dtype)
+    # normal with fan-in scaling
+    if spec.scale is not None:
+        std = spec.scale
+    else:
+        fan_in = 1
+        for a in (spec.fan_in_axes or (0,)):
+            fan_in *= spec.shape[a]
+        std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_tree(key, specs: Any, default_dtype=jnp.bfloat16) -> Any:
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_param(k, s, default_dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(specs: Any, default_dtype=jnp.bfloat16) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# functional layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x, w_gate, w_up, w_down, constrain=lambda x, a: x):
+    """SwiGLU MLP; ``constrain`` pins the hidden activation sharding."""
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return h @ w_down
+
+
+def relu_squared_mlp(x, w_in, w_out, constrain=lambda x, a: x):
+    h = jnp.square(jax.nn.relu(x @ w_in))
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return h @ w_out

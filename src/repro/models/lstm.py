@@ -1,0 +1,117 @@
+"""The paper's own models: LM (Jozefowicz BIGLSTM, 800k vocab) and NMT
+(GNMT-style 4-layer LSTM enc-dec). These are the canonical *sparse* models —
+the hybrid-communication technique's home turf (paper Table 1/4).
+
+LSTM-with-projection cell, scanned over time. The huge embedding +
+softmax tables go through the PS exchange exactly like the transformer
+archs; the small LSTM weights take the dense AllReduce path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding as emb
+from repro.core.xent import sharded_xent
+from repro.models.layers import ParamSpec, stack_tree
+
+
+def lstm_cell_specs(d_in: int, hidden: int, proj: int) -> dict:
+    return {
+        "w_x": ParamSpec((d_in, 4 * hidden), (None, "lstm_hidden"), fan_in_axes=(0,)),
+        "w_h": ParamSpec((proj, 4 * hidden), (None, "lstm_hidden"), fan_in_axes=(0,)),
+        "bias": ParamSpec((4 * hidden,), ("lstm_hidden",), init="zeros"),
+        "w_proj": ParamSpec((hidden, proj), ("lstm_hidden", None), fan_in_axes=(0,)),
+    }
+
+
+def model_specs(cfg, rt) -> dict:
+    d, hidden = cfg.d_model, cfg.d_ff
+    vp = rt.padded_vocab
+    specs = {
+        "embed": ParamSpec((vp, d), ("vocab", "embed"), init="embed", sparse=True),
+        "layers": stack_tree(lstm_cell_specs(d, hidden, d), cfg.n_layers),
+        "head": ParamSpec((vp, d), ("vocab", "embed"), scale=0.02),
+    }
+    if cfg.is_encdec:
+        specs["enc_layers"] = stack_tree(
+            lstm_cell_specs(d, hidden, d), cfg.enc_layers)
+        specs["enc_embed"] = ParamSpec((vp, d), ("vocab", "embed"),
+                                       init="embed", sparse=True)
+        # simple dot cross-attention mixer (GNMT-lite)
+        specs["attn_mix"] = ParamSpec((2 * d, d), (None, None), fan_in_axes=(0,))
+    return specs
+
+
+def _lstm_layer(p, xs, state, rt):
+    """xs: (B,S,Din); state: (c (B,H), h (B,P)). Scans over time."""
+    w_x, w_h, bias, w_proj = p["w_x"], p["w_h"], p["bias"], p["w_proj"]
+    gx = xs @ w_x                                  # (B,S,4H) hoisted matmul
+    gx = rt.constrain(gx, ("batch", None, "lstm_hidden"))
+
+    def step(carry, g_t):
+        c, h = carry
+        gates = g_t + h @ w_h + bias
+        i, f, g, o = jnp.split(gates.astype(jnp.float32), 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h_new = (jax.nn.sigmoid(o) * jnp.tanh(c)).astype(xs.dtype) @ w_proj
+        return (c, h_new), h_new
+
+    (c, h), ys = jax.lax.scan(step, state, gx.transpose(1, 0, 2))
+    return ys.transpose(1, 0, 2), (c, h)
+
+
+def _init_state(cfg, batch, n_layers):
+    return (jnp.zeros((n_layers, batch, cfg.d_ff), jnp.float32),
+            jnp.zeros((n_layers, batch, cfg.d_model), jnp.bfloat16))
+
+
+def _run_stack(layers_p, x, states, rt):
+    n = jax.tree.leaves(layers_p)[0].shape[0]
+    cs, hs = states
+    new_c, new_h = [], []
+    for i in range(n):  # few layers; unrolled for per-layer residuals
+        p_i = jax.tree.map(lambda a: a[i], layers_p)
+        y, (c, h) = _lstm_layer(p_i, x, (cs[i], hs[i]), rt)
+        x = x + y if y.shape == x.shape else y
+        new_c.append(c)
+        new_h.append(h)
+    return x, (jnp.stack(new_c), jnp.stack(new_h))
+
+
+def forward(params, batch, *, cfg, rt, state=None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    ctx = rt.embed_ctx()
+    x, metrics = emb.lookup(params["embed"], tokens, ctx=ctx,
+                            capacity=rt.embed_capacity)
+    x = x.astype(rt.dtype)
+    if state is None:
+        state = _init_state(cfg, b, cfg.n_layers)
+    if cfg.is_encdec:
+        src, m2 = emb.lookup(params["enc_embed"], batch["src_tokens"],
+                             ctx=ctx, capacity=rt.embed_capacity)
+        enc_out, _ = _run_stack(params["enc_layers"], src.astype(rt.dtype),
+                                _init_state(cfg, b, cfg.enc_layers), rt)
+        metrics = {k: metrics[k] + m2[k] for k in metrics}
+    x, new_state = _run_stack(params["layers"], x, state, rt)
+    if cfg.is_encdec:
+        # GNMT-lite dot attention over encoder states
+        scores = jnp.einsum("bsd,btd->bst", x.astype(jnp.float32),
+                            enc_out.astype(jnp.float32)) * (cfg.d_model ** -0.5)
+        ctx_vec = jnp.einsum("bst,btd->bsd", jax.nn.softmax(scores, -1),
+                             enc_out.astype(jnp.float32)).astype(x.dtype)
+        x = jnp.concatenate([x, ctx_vec], axis=-1) @ params["attn_mix"]
+    logits = jnp.einsum("bsd,vd->bsv", x, params["head"].astype(x.dtype))
+    logits = rt.constrain(logits, ("batch", None, "vocab"))
+    return logits, new_state, metrics
+
+
+def loss_fn(params, batch, *, cfg, rt):
+    logits, _, metrics = forward(params, batch, cfg=cfg, rt=rt)
+    per_tok = sharded_xent(logits, batch["labels"], mesh=rt.mesh,
+                           model_axis="model", batch_axes=rt.batch_axes,
+                           vocab=cfg.vocab_size)
+    loss = jnp.mean(per_tok)
+    metrics["xent"] = loss
+    return loss, metrics

@@ -1,0 +1,155 @@
+"""RWKV6 "Finch" — attention-free time-mix with data-dependent per-channel
+decay, plus squared-ReLU channel-mix. [arXiv:2404.05892]
+
+Training uses the chunked linear-attention form (GLA-style factorization):
+with per-channel log-decay ``lw = -exp(w)`` and in-chunk cumulative sums
+``cum``, the intra-chunk scores factor as
+
+    s[t,i] = < r_t · exp(cum_{t-1}),  k_i · exp(-cum_i) >   (i < t)
+
+so each chunk is two matmuls + a state carry — MXU-friendly, O(S·C) memory.
+Decode carries O(1) state per layer: (H, K, V) wkv state + token-shift x.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, rms_norm
+
+CLAMP = 80.0  # fp32-safe clamp; exact while chunk * |log-decay| <= 80
+
+
+def rwkv_block_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    lora = 64
+    return {
+        "tm": {  # time mix
+            "mu": ParamSpec((5, d), (None, None), init="zeros"),  # r,k,v,w,g shifts
+            "w_r": ParamSpec((d, d), (None, "heads_hd"), fan_in_axes=(0,)),
+            "w_k": ParamSpec((d, d), (None, "heads_hd"), fan_in_axes=(0,)),
+            "w_v": ParamSpec((d, d), (None, "heads_hd"), fan_in_axes=(0,)),
+            "w_g": ParamSpec((d, d), (None, "heads_hd"), fan_in_axes=(0,)),
+            "w_o": ParamSpec((d, d), ("heads_hd", None), fan_in_axes=(0,)),
+            "w0": ParamSpec((d,), (None,), init="zeros"),
+            "w_lora_a": ParamSpec((d, lora), (None, None), scale=0.02),
+            "w_lora_b": ParamSpec((lora, d), (None, None), init="zeros"),
+            "bonus": ParamSpec((d,), (None,), init="zeros"),        # u
+            "ln_w": ParamSpec((d,), (None,), init="ones"),          # group/out norm
+        },
+        "cm": {  # channel mix
+            "mu": ParamSpec((2, d), (None, None), init="zeros"),
+            "w_in": ParamSpec((d, f), (None, "mlp"), fan_in_axes=(0,)),
+            "w_out": ParamSpec((f, d), ("mlp", None), fan_in_axes=(0,)),
+            "w_recv": ParamSpec((d, d), (None, None), fan_in_axes=(0,)),
+        },
+        "ln1": ParamSpec((d,), (None,), init="ones"),
+        "ln2": ParamSpec((d,), (None,), init="ones"),
+    }
+
+
+def _token_shift(x, x_prev):
+    """x: (B,S,D); x_prev: (B,D) last token of previous segment."""
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def _chunk_wkv(r, k, v, lw, bonus, state, chunk):
+    """Chunked WKV. r/k/v: (B,S,H,hd); lw: (B,S,H,hd) log-decay (<=0).
+
+    state: (B,H,hd,hd) carried. Returns out (B,S,H,hd), new state.
+    """
+    b, s, h, e = r.shape
+    pad = (-s) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, lw = z(r), z(k), z(v), z(lw)
+    n = r.shape[1] // chunk
+    resh = lambda a: a.reshape(b, n, chunk, h, e).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, lwc = resh(r), resh(k), resh(v), resh(lw)
+
+    def body(st, inp):
+        rj, kj, vj, lwj = [a.astype(jnp.float32) for a in inp]
+        cum = jnp.cumsum(lwj, axis=1)                       # (B,C,H,hd) inclusive
+        cin = cum - lwj                                      # exclusive (cum_{t-1})
+        qf = rj * jnp.exp(jnp.clip(cin, -CLAMP, 0.0))
+        kf = kj * jnp.exp(jnp.clip(-cum, 0.0, CLAMP))
+        s_tt = jnp.einsum("bthe,bihe->bhti", qf, kf)         # intra scores
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        s_tt = jnp.where(mask[None, None], s_tt, 0.0)
+        out = jnp.einsum("bhti,bihe->bthe", s_tt, vj)
+        # diagonal bonus: u ⊙ k_t
+        diag = jnp.einsum("bthe,bthe->bth", rj * bonus, kj)
+        out = out + diag[..., None] * vj
+        # inter-chunk: state contribution
+        out = out + jnp.einsum("bthe,bhef->bthf", qf, st)
+        # state update
+        tot = cum[:, -1:, :, :]                              # (B,1,H,hd)
+        kdec = kj * jnp.exp(jnp.clip(tot - cum, -CLAMP, CLAMP))
+        st_new = st * jnp.exp(jnp.clip(tot, -CLAMP, 0.0)).squeeze(1)[..., None] \
+            + jnp.einsum("bthe,bthf->bhef", kdec, vj)
+        return st_new, out
+
+    state, outs = jax.lax.scan(body, state.astype(jnp.float32),
+                               (rc, kc, vc, lwc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, n * chunk, h, e)[:, :s]
+    return out, state
+
+
+def time_mix(p, x, x_prev, state, *, cfg, rt, chunk=32):
+    """x: (B,S,D). Returns (out, (x_last, new_state))."""
+    b, s, d = x.shape
+    h, e = cfg.n_heads, cfg.head_dim
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    mix = lambda i: x + (xs - x) * mu[i]
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = (xr @ p["w_r"]).reshape(b, s, h, e)
+    k = (xk @ p["w_k"]).reshape(b, s, h, e)
+    v = (xv @ p["w_v"]).reshape(b, s, h, e)
+    g = xg @ p["w_g"]
+    # data-dependent decay (Finch): w = w0 + tanh(xw A) B
+    wdelta = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32)) \
+        @ p["w_lora_b"].astype(jnp.float32)
+    w = p["w0"].astype(jnp.float32) + wdelta
+    lw = -jnp.exp(w).reshape(b, s, h, e)                     # log-decay <= 0
+    bonus = jnp.exp(p["bonus"].astype(jnp.float32)).reshape(h, e)
+    r = rt.constrain(r, ("batch", None, "q_heads", None))
+    out, new_state = _chunk_wkv(r, k, v, lw, bonus, state, chunk)
+    out = out.reshape(b, s, d).astype(x.dtype)
+    # per-head group norm then gate
+    out = rms_norm(out.reshape(b, s, h, e),
+                   p["ln_w"].reshape(h, e), cfg.norm_eps).reshape(b, s, d)
+    out = out * jax.nn.silu(g)
+    return out @ p["w_o"], (x[:, -1, :], new_state)
+
+
+def channel_mix(p, x, x_prev, *, rt):
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0]
+    xr = x + (xs - x) * mu[1]
+    hidden = jnp.square(jax.nn.relu(xk @ p["w_in"]))
+    hidden = rt.constrain(hidden, ("batch", None, "mlp"))
+    out = hidden @ p["w_out"]
+    return out * jax.nn.sigmoid(xr @ p["w_recv"]), x[:, -1, :]
+
+
+def rwkv_block(p, x, carry, *, cfg, rt, chunk=32):
+    """One RWKV6 layer. carry = (tm_x, wkv_state, cm_x)."""
+    tm_x, wkv_state, cm_x = carry
+    h1 = rms_norm(x, p["ln1"], cfg.norm_eps)
+    att, (tm_x, wkv_state) = time_mix(p["tm"], h1, tm_x, wkv_state,
+                                      cfg=cfg, rt=rt, chunk=chunk)
+    x = x + att
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    ffn, cm_x = channel_mix(p["cm"], h2, cm_x, rt=rt)
+    x = x + ffn
+    return x, (tm_x, wkv_state, cm_x)
+
+
+def init_rwkv_carry(cfg, batch, dtype=jnp.float32):
+    h, e, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+    return (jnp.zeros((batch, d), dtype),
+            jnp.zeros((batch, h, e, e), jnp.float32),
+            jnp.zeros((batch, d), dtype))

@@ -1,0 +1,90 @@
+"""Selective SSM (Mamba-style, S4D-real) for hymba's parallel SSM heads.
+
+Recurrence  h[t,d,n] = a[t,d]·h[t-1,d,n] + (dt[t,d]·x[t,d])·B[t,n]
+            y[t,d]   = Σ_n C[t,n]·h[t,d,n]
+with data-dependent a[t,d] = exp(dt[t,d]·A_d), A_d = -exp(A_log_d).
+
+Chunked parallel form (same GLA factorization as rwkv.py):
+    y[t,d] = exp(cum[t,d]) · Σ_{i<=t} (C_t·B_i) · (dt·x·exp(-cum))[i,d]
+i.e. one (C×C) score matmul + one (C×D) einsum per chunk + state carry.
+Decode carries h (B, D, N) — O(1) per step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+
+CLAMP = 80.0  # fp32-safe clamp; exact while chunk * |log-decay| <= 80
+
+
+def ssm_specs(cfg) -> dict:
+    d, n = cfg.d_model, cfg.ssm_state
+    return {
+        "w_in": ParamSpec((d, d), (None, "heads_hd"), fan_in_axes=(0,)),
+        "w_gate": ParamSpec((d, d), (None, "heads_hd"), fan_in_axes=(0,)),
+        "w_b": ParamSpec((d, n), (None, None), scale=0.02),
+        "w_c": ParamSpec((d, n), (None, None), scale=0.02),
+        "w_dt": ParamSpec((d, d), (None, "heads_hd"), scale=0.02),
+        "dt_bias": ParamSpec((d,), (None,), init="zeros"),
+        "a_log": ParamSpec((d,), (None,), init="zeros"),
+        "w_out": ParamSpec((d, d), ("heads_hd", None), fan_in_axes=(0,)),
+    }
+
+
+def _chunk_ssm(u, dt, b_t, c_t, a_d, h0, chunk):
+    """u/dt: (B,S,D); b_t/c_t: (B,S,N); a_d: (D,) negative. h0: (B,D,N)."""
+    bsz, s, d = u.shape
+    n = b_t.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_t = jnp.pad(b_t, ((0, 0), (0, pad), (0, 0)))
+        c_t = jnp.pad(c_t, ((0, 0), (0, pad), (0, 0)))
+    nc = u.shape[1] // chunk
+    r5 = lambda a: a.reshape(bsz, nc, chunk, a.shape[-1]).transpose(1, 0, 2, 3)
+    uc, dtc, bc, cc = r5(u), r5(dt), r5(b_t), r5(c_t)
+
+    def body(h, inp):
+        uj, dtj, bj, cj = [a.astype(jnp.float32) for a in inp]
+        la = dtj * a_d[None, None, :]                    # (B,C,D) log decay <= 0
+        cum = jnp.cumsum(la, axis=1)                     # inclusive
+        decay_out = jnp.exp(jnp.clip(cum, -CLAMP, 0.0))
+        scores = jnp.einsum("btn,bin->bti", cj, bj)      # (B,C,C)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        scores = jnp.where(mask[None], scores, 0.0)
+        src = dtj * uj * jnp.exp(jnp.clip(-cum, -CLAMP, CLAMP))
+        y = decay_out * jnp.einsum("bti,bid->btd", scores, src)
+        # inter-chunk: y += exp(cum_t) * (C_t · h[d,:])
+        y = y + decay_out * jnp.einsum("btn,bdn->btd", cj, h)
+        # state update: h' = exp(tot)·h + Σ_i exp(tot-cum_i)·(dt·u)_i ⊗ B_i
+        tot = cum[:, -1, :]                              # (B,D)
+        kdec = dtj * uj * jnp.exp(jnp.clip(tot[:, None, :] - cum, -CLAMP, CLAMP))
+        h_new = h * jnp.exp(jnp.clip(tot, -CLAMP, 0.0))[..., None] \
+            + jnp.einsum("btd,btn->bdn", kdec, bj)
+        return h_new, y
+
+    h, ys = jax.lax.scan(body, h0.astype(jnp.float32), (uc, dtc, bc, cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(bsz, nc * chunk, d)[:, :s]
+    return y, h
+
+
+def ssm_mix(p, x, h0, *, cfg, rt, chunk=128):
+    """x: (B,S,D) -> (y, h). Selective-SSM branch."""
+    u = x @ p["w_in"]
+    u = rt.constrain(u, ("batch", None, "heads_hd"))
+    gate = jax.nn.silu(x @ p["w_gate"])
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    b_t = (x @ p["w_b"]).astype(jnp.float32)
+    c_t = (x @ p["w_c"]).astype(jnp.float32)
+    a_d = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, h = _chunk_ssm(u.astype(jnp.float32), dt, b_t, c_t, a_d, h0, chunk)
+    y = (y.astype(x.dtype) * gate) @ p["w_out"]
+    return y, h
+
+
+def init_ssm_state(cfg, batch):
+    return jnp.zeros((batch, cfg.d_model, cfg.ssm_state), jnp.float32)

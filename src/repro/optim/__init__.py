@@ -1,0 +1,4 @@
+from repro.optim.optimizer import (
+    Optimizer, adamw, sgd, momentum, global_norm, clip_by_global_norm,
+    TrainState,
+)

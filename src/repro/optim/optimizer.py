@@ -1,0 +1,181 @@
+"""Optimizers with Parallax placement discipline.
+
+Correctness rules from the paper (§3.1, §5.3.2) enforced structurally:
+  * gradient clipping happens AFTER aggregation (grads from jax.grad in
+    global semantics are post-aggregation by construction); the global norm
+    is computed as per-shard partial ‖g‖² + scalar psum — only scalars cross
+    shards (OPAU). The OPAU=off baseline force-replicates gradients first so
+    the naive placement's extra all-gathers are visible in HLO.
+  * AccumParams (Adam moments, momentum) live with their parameter shard
+    (same sharding as the parameter, optionally further sharded by ZeRO-1).
+  * EMA shadow parameters update when their parameter updates, on the same
+    shard (the paper's moving-average placement rule).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    m: Any          # first moment / momentum (None for sgd)
+    v: Any          # second moment (None for sgd/momentum)
+    ema: Any        # EMA shadow params (None if disabled)
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], TrainState]
+    update: Callable[[TrainState, Any], tuple[TrainState, dict]]
+
+
+def global_norm(grads, rt=None) -> jax.Array:
+    """Post-aggregation global norm; partial-sums + scalar reduction (OPAU)."""
+    leaves = jax.tree.leaves(grads)
+    if rt is not None and not rt.run_cfg.opau and rt.mesh is not None:
+        # naive placement baseline: replicate the aggregated grads first
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        leaves = [jax.lax.with_sharding_constraint(
+            g, NamedSharding(rt.mesh, P())) for g in leaves]
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float, rt=None):
+    norm = global_norm(grads, rt)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def _ema_update(ema, params, decay):
+    if ema is None:
+        return None
+    return jax.tree.map(
+        lambda e, p: (e.astype(jnp.float32) * decay
+                      + p.astype(jnp.float32) * (1 - decay)).astype(e.dtype),
+        ema, params)
+
+
+def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = 1.0, ema_decay: float = 0.0,
+          rt=None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params) -> TrainState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return TrainState(
+            step=jnp.zeros((), jnp.int32),
+            params=params,
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+            ema=jax.tree.map(lambda p: p.astype(jnp.float32), params)
+            if ema_decay > 0 else None,
+        )
+
+    def update(state: TrainState, grads) -> tuple[TrainState, dict]:
+        metrics = {}
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm, rt)
+            metrics["grad_norm"] = gnorm
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+        lr_t = lr_fn(step)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            upd32 = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                upd32 = upd32 + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * upd32).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, state.params, grads, state.m, state.v)
+        params = jax.tree.map(lambda o: o[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        ema = _ema_update(state.ema, params, ema_decay)
+        return TrainState(step, params, m, v, ema), metrics
+
+    return Optimizer("adamw", init, update)
+
+
+def momentum(lr: float | Callable = 1e-2, mu: float = 0.9,
+             clip_norm: Optional[float] = None, ema_decay: float = 0.0,
+             rt=None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params) -> TrainState:
+        return TrainState(
+            step=jnp.zeros((), jnp.int32), params=params,
+            m=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            v=None,
+            ema=jax.tree.map(lambda p: p.astype(jnp.float32), params)
+            if ema_decay > 0 else None)
+
+    def update(state, grads):
+        metrics = {}
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm, rt)
+            metrics["grad_norm"] = gnorm
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        m = jax.tree.map(lambda mm, g: mu * mm + g.astype(jnp.float32),
+                         state.m, grads)
+        params = jax.tree.map(
+            lambda p, mm: (p.astype(jnp.float32) - lr_t * mm).astype(p.dtype),
+            state.params, m)
+        ema = _ema_update(state.ema, params, ema_decay)
+        return TrainState(step, params, m, None, ema), metrics
+
+    return Optimizer("momentum", init, update)
+
+
+def sgd(lr: float | Callable = 1e-2, clip_norm: Optional[float] = None,
+        rt=None) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params) -> TrainState:
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          m=None, v=None, ema=None)
+
+    def update(state, grads):
+        metrics = {}
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm, rt)
+            metrics["grad_norm"] = gnorm
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            state.params, grads)
+        return TrainState(step, params, None, None, None), metrics
+
+    return Optimizer("sgd", init, update)
+
+
+def make_optimizer(rt) -> Optimizer:
+    rc = rt.run_cfg
+    if rc.optimizer == "adamw":
+        return adamw(rc.learning_rate, weight_decay=rc.weight_decay,
+                     clip_norm=rc.clip_norm, ema_decay=rc.ema_decay, rt=rt)
+    if rc.optimizer == "momentum":
+        return momentum(rc.learning_rate, clip_norm=rc.clip_norm,
+                        ema_decay=rc.ema_decay, rt=rt)
+    if rc.optimizer == "sgd":
+        return sgd(rc.learning_rate, clip_norm=rc.clip_norm, rt=rt)
+    raise ValueError(f"unknown optimizer {rc.optimizer!r}")

@@ -1,0 +1,3 @@
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.monitor import StepMonitor
+from repro.runtime.server import Server, ServerConfig

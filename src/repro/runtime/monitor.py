@@ -1,0 +1,55 @@
+"""Step-time monitoring: throughput accounting + straggler detection.
+
+In synchronous data-parallel training a straggling host slows every step
+(the collective waits). Without per-host timers (single-controller here),
+stragglers manifest as step-time outliers; the monitor flags sustained
+regressions so the driver loop can act (checkpoint + re-mesh without the
+slow host = the elastic restart path in trainer.py).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StepMonitor:
+    window: int = 50
+    straggler_factor: float = 2.0     # step > factor x median => outlier
+    sustained: int = 5                # consecutive outliers => straggler
+    times: collections.deque = field(default_factory=collections.deque)
+    _last: float = 0.0
+    _outlier_run: int = 0
+    total_steps: int = 0
+    total_tokens: int = 0
+
+    def start(self):
+        self._last = time.perf_counter()
+
+    def stop(self, tokens: int = 0) -> dict:
+        dt = time.perf_counter() - self._last
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.popleft()
+        self.total_steps += 1
+        self.total_tokens += tokens
+        med = self.median()
+        is_outlier = len(self.times) >= 10 and dt > self.straggler_factor * med
+        self._outlier_run = self._outlier_run + 1 if is_outlier else 0
+        return {
+            "step_time_s": dt,
+            "median_s": med,
+            "tokens_per_s": tokens / dt if dt > 0 else 0.0,
+            "straggler_suspected": self.straggler_suspected,
+        }
+
+    def median(self) -> float:
+        if not self.times:
+            return 0.0
+        s = sorted(self.times)
+        return s[len(s) // 2]
+
+    @property
+    def straggler_suspected(self) -> bool:
+        return self._outlier_run >= self.sustained

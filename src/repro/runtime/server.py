@@ -1,0 +1,119 @@
+"""Batched serving loop: continuous-batching-lite over the decode step.
+
+Requests enter a queue; the server packs up to ``max_batch`` sequences into
+the fixed decode batch (padding unused slots), prefills new arrivals, and
+steps the shared KV cache. Slot lifecycle (free -> prefilling -> decoding ->
+done) is host-side; device work is exactly the two jitted functions from
+core/transform.py (prefill_step, decode_step), so the same plan/shardings
+as the dry-run serve cells apply.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core.runtime import Runtime
+from repro.core.transform import analyze, make_decode_step
+from repro.models.model import build_model
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int = 16
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class ServerConfig:
+    max_batch: int = 8
+    max_seq: int = 256
+    greedy: bool = True
+
+
+class Server:
+    def __init__(self, model_cfg: ModelConfig, run_cfg: RunConfig,
+                 scfg: ServerConfig, mesh=None, params=None, seed: int = 0):
+        shape = ShapeConfig("serve", scfg.max_seq, scfg.max_batch, "decode")
+        self.rt = Runtime(model_cfg, run_cfg, shape, mesh=mesh)
+        self.model = build_model(model_cfg, self.rt)
+        self.plan = analyze(self.model, self.rt)
+        self.rt.plan = self.plan
+        self.scfg = scfg
+        self.params = params if params is not None else \
+            self.model.init(jax.random.key(seed))
+        self.cache = self.model.init_cache(scfg.max_batch, scfg.max_seq)
+        self.decode_step = jax.jit(
+            make_decode_step(self.model, self.rt, self.plan))
+        # slot bookkeeping
+        self.slot_req: list[Optional[Request]] = [None] * scfg.max_batch
+        self.slot_pos = np.zeros(scfg.max_batch, np.int32)
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+        self._tokens = np.zeros((scfg.max_batch, 1), np.int32)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.scfg.max_batch):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[i] = req
+                # teacher-forced prefill: feed prompt tokens one by one
+                # through the decode step (cache fills as a side effect).
+                for t in req.prompt[:-1]:
+                    self._tokens[:] = 0
+                    self._tokens[i, 0] = t
+                    self._step_device()
+                    self.slot_pos[i] += 1
+                self._tokens[i, 0] = req.prompt[-1]
+
+    def _step_device(self):
+        # single shared cache_len: homogeneous-position batch (decode_32k
+        # cell semantics); per-slot positions tracked host-side
+        logits, self.cache = self.decode_step(
+            self.params, self.cache, jnp.asarray(self._tokens),
+            jnp.asarray(int(self.slot_pos.max())))
+        return logits
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One decode iteration over all active slots; returns #active."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        logits = self._step_device()
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        for i in active:
+            req = self.slot_req[i]
+            tok = int(nxt[i])
+            req.out_tokens.append(tok)
+            self.slot_pos[i] += 1
+            self._tokens[i, 0] = tok
+            if len(req.out_tokens) >= req.max_new_tokens or \
+                    self.slot_pos[i] >= self.scfg.max_seq - 1:
+                req.done = True
+                self.completed.append(req)
+                self.slot_req[i] = None
+                self.slot_pos[i] = 0
+                self._tokens[i, 0] = 0
+        return len(active)
+
+    def run_until_drained(self, max_iters: int = 10_000) -> list[Request]:
+        it = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and it < max_iters:
+            self.step()
+            it += 1
+        return self.completed

@@ -1,0 +1,157 @@
+"""Fault-tolerant training driver.
+
+Responsibilities beyond the jitted step:
+  * deterministic resume — the data pipeline is step-addressed, so restoring
+    (state, step) from a checkpoint reproduces the exact remaining stream;
+  * checkpoint/restart — async sharded checkpoints every N steps; on any
+    step failure the driver restores the last committed checkpoint and
+    continues (bounded retries);
+  * elastic re-mesh — ``Trainer.remesh(new_mesh)`` rebuilds the plan/step on
+    a different mesh and reshards the live state through the elastic
+    checkpoint path (the node-failure story: drop the bad host's slice,
+    re-mesh, resume);
+  * straggler detection via runtime/monitor.py.
+"""
+from __future__ import annotations
+
+import logging
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step,
+                                   restore_checkpoint)
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core.runtime import Runtime
+from repro.core.transform import (analyze, batch_shardings, make_train_step,
+                                  state_shardings)
+from repro.data.pipeline import Dataset
+from repro.models.model import build_model
+from repro.optim.optimizer import make_optimizer
+from repro.runtime.monitor import StepMonitor
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep_ckpts: int = 3
+    max_retries: int = 3
+    log_every: int = 10
+    metrics_host_every: int = 1
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, shape_cfg: ShapeConfig,
+                 run_cfg: RunConfig, tcfg: TrainerConfig,
+                 dataset: Dataset, mesh=None):
+        self.model_cfg, self.shape_cfg = model_cfg, shape_cfg
+        self.run_cfg, self.tcfg = run_cfg, tcfg
+        self.dataset = dataset
+        self.monitor = StepMonitor()
+        self.ckpt = AsyncCheckpointer(tcfg.ckpt_dir, tcfg.keep_ckpts) \
+            if tcfg.ckpt_dir else None
+        self.step = 0
+        self._build(mesh)
+
+    # ------------------------------------------------------------------
+    def _build(self, mesh, state=None):
+        self.mesh = mesh
+        self.rt = Runtime(self.model_cfg, self.run_cfg, self.shape_cfg,
+                          mesh=mesh)
+        self.model = build_model(self.model_cfg, self.rt)
+        self.plan = analyze(self.model, self.rt)
+        self.rt.plan = self.plan
+        self.optimizer = make_optimizer(self.rt)
+        step_fn = make_train_step(self.model, self.optimizer, self.rt,
+                                  self.plan)
+        if state is None:
+            params = self.model.init(jax.random.key(self.run_cfg.seed))
+            state = self.optimizer.init(params)
+        if mesh is not None:
+            self.shardings = state_shardings(self.plan, state)
+            state = jax.device_put(state, self.shardings)
+            bs = batch_shardings(self.plan, self.model.input_specs())
+            self.train_step = jax.jit(
+                step_fn, in_shardings=(self.shardings, bs),
+                out_shardings=(self.shardings, None), donate_argnums=0)
+        else:
+            self.shardings = None
+            self.train_step = jax.jit(step_fn, donate_argnums=0)
+        self.state = state
+
+    # ------------------------------------------------------------------
+    def maybe_restore(self):
+        if self.ckpt is None:
+            return
+        last = latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return
+        self.state, self.step, extra = restore_checkpoint(
+            self.tcfg.ckpt_dir, self.state, shardings=self.shardings)
+        log.info("restored checkpoint at step %d", self.step)
+
+    def remesh(self, new_mesh):
+        """Elastic re-mesh: reshard live state onto a new mesh (e.g. after
+        dropping a failed host slice)."""
+        host_state = jax.tree.map(
+            lambda a: None if a is None else np.asarray(jax.device_get(a)),
+            self.state)
+        self._build(new_mesh, state=None)
+        # reshard the old values onto the new mesh
+        def put(old, new_sh):
+            return jax.device_put(old, new_sh) if old is not None else None
+        if self.shardings is not None:
+            self.state = jax.tree.map(put, host_state, self.shardings)
+        else:
+            self.state = jax.device_put(host_state)
+
+    # ------------------------------------------------------------------
+    def run(self, on_metrics: Optional[Callable[[int, dict], None]] = None):
+        tokens_per_step = self.shape_cfg.tokens
+        retries = 0
+        while self.step < self.tcfg.total_steps:
+            batch = self.dataset.batch(self.step)
+            self.monitor.start()
+            try:
+                self.state, metrics = self.train_step(self.state, batch)
+                if (self.step + 1) % self.tcfg.metrics_host_every == 0:
+                    metrics = {k: float(v) for k, v in metrics.items()
+                               if getattr(v, "ndim", 0) == 0}
+                retries = 0
+            except Exception as e:  # failure path: restore + retry
+                retries += 1
+                log.exception("step %d failed (retry %d/%d)",
+                              self.step, retries, self.tcfg.max_retries)
+                if retries > self.tcfg.max_retries or self.ckpt is None:
+                    raise
+                self.ckpt.wait()
+                self.maybe_restore()
+                continue
+            stats = self.monitor.stop(tokens=tokens_per_step)
+            self.step += 1
+            if self.ckpt is not None and self.step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(self.step, self.state,
+                               extra={"dataset_step": self.step})
+            if on_metrics is not None:
+                on_metrics(self.step, {**metrics, **stats})
+            elif self.step % self.tcfg.log_every == 0:
+                log.info("step %d loss %.4f %.0f tok/s", self.step,
+                         metrics.get("loss", float("nan")),
+                         stats["tokens_per_s"])
+            if self.monitor.straggler_suspected:
+                log.warning("sustained step-time regression at step %d — "
+                            "straggler suspected; consider remesh()",
+                            self.step)
+        if self.ckpt is not None:
+            self.ckpt.save(self.step, self.state,
+                           extra={"dataset_step": self.step})
+            self.ckpt.wait()
+        return self.state

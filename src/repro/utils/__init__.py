@@ -1,0 +1,8 @@
+from repro.utils.tree import (
+    tree_bytes,
+    tree_count,
+    tree_map_with_path_names,
+    named_leaves,
+)
+from repro.utils.hlo import parse_collectives, collective_bytes_by_kind
+from repro.utils.roofline import RooflineTerms, roofline_from_analysis, HW

@@ -1,0 +1,62 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _path_name(path) -> str:
+    """Render a jax tree path as a dotted parameter name."""
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(p.name)
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def tree_map_with_path_names(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """tree_map where fn receives (dotted_name, leaf)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: fn(_path_name(path), leaf), tree
+    )
+
+
+def named_leaves(tree: Any) -> list[tuple[str, Any]]:
+    """[(dotted_name, leaf)] for every leaf of the tree."""
+    out: list[tuple[str, Any]] = []
+    jax.tree_util.tree_map_with_path(
+        lambda path, leaf: out.append((_path_name(path), leaf)), tree
+    )
+    return out
+
+
+def leaf_count(leaf) -> int:
+    shape = getattr(leaf, "shape", None)
+    if shape is None:
+        return 1
+    return int(math.prod(shape)) if shape else 1
+
+
+def leaf_bytes(leaf) -> int:
+    dtype = getattr(leaf, "dtype", None)
+    itemsize = np.dtype(dtype).itemsize if dtype is not None else 4
+    return leaf_count(leaf) * itemsize
+
+
+def tree_count(tree: Any) -> int:
+    """Total number of scalar elements in the tree."""
+    return sum(leaf_count(l) for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of the tree at its leaf dtypes."""
+    return sum(leaf_bytes(l) for l in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,44 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — the main test session
+keeps its single CPU device; multi-device tests run in subprocesses
+(see distributed_run)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(scope="session")
+def tiny_shape():
+    from repro.configs import ShapeConfig
+    return ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+
+
+def distributed_run(code: str, devices: int = 8, timeout: int = 300) -> dict:
+    """Run `code` in a subprocess with N fake devices; the snippet must
+    print a single json line prefixed with RESULT:."""
+    prelude = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import json
+        import jax
+        import numpy as np
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert proc.returncode == 0, \
+        f"subprocess failed:\nSTDOUT:{proc.stdout[-3000:]}\nSTDERR:{proc.stderr[-3000:]}"
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT:"):
+            return json.loads(line[len("RESULT:"):])
+    raise AssertionError(f"no RESULT line in output: {proc.stdout[-2000:]}")

@@ -1,0 +1,62 @@
+"""Table 3 cost model: paper numbers, crossovers, and invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+
+
+def test_paper_table3_formulas():
+    dims = cm.MeshDims(model=1, data=48, pod=1)     # paper: 48 GPUs
+    b = 1.0
+    assert cm.dense_allreduce_bytes(b, dims) == pytest.approx(2 * 47 / 48)
+    assert cm.sparse_mpi_bytes(b, 0.01, dims) == pytest.approx(2 * 47 * 0.01)
+    # PS pull for a sparse param ~ 2αb when the table is served off-worker
+    dims_ps = cm.MeshDims(model=8, data=48)
+    pull_push = cm.sparse_ps_bytes(b, 0.01, dims_ps)
+    assert pull_push < cm.sparse_mpi_bytes(b, 0.01, dims_ps)
+
+
+def test_hybrid_chooses_per_parameter():
+    """The paper's headline: sparse params -> PS, dense params -> MPI."""
+    dims = cm.MeshDims(model=16, data=16)
+    m_dense, _ = cm.choose_method(b=1e9, sparse=False, alpha=1.0, dims=dims,
+                                  comm_mode="hybrid")
+    m_sparse, costs = cm.choose_method(b=1e9, sparse=True, alpha=0.01,
+                                       dims=dims, comm_mode="hybrid")
+    assert m_dense == "allreduce"
+    assert m_sparse in ("ps", "ps_gather")
+    assert costs[m_sparse] < costs["mpi_gatherv"]
+
+
+def test_ps_variants_crossover():
+    """Dense-shard push wins at high α, sparse gather push at low α."""
+    dims = cm.MeshDims(model=16, data=16)
+    lo = cm.sparse_ps_gather_bytes(1.0, 0.001, dims)
+    hi_gather = cm.sparse_ps_gather_bytes(1.0, 0.5, dims)
+    hi_dense = cm.sparse_ps_bytes(1.0, 0.5, dims)
+    assert lo < cm.sparse_ps_bytes(1.0, 0.001, dims)
+    assert hi_dense < hi_gather
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(1e3, 1e12), st.floats(1e-6, 1.0),
+       st.integers(2, 64), st.integers(1, 64))
+def test_costs_nonnegative_and_mpi_monotone_in_n(b, alpha, data, model):
+    dims = cm.MeshDims(model=model, data=data)
+    for fn in (cm.dense_allreduce_bytes, cm.dense_fsdp_bytes):
+        assert fn(b, dims) >= 0
+    assert cm.sparse_mpi_bytes(b, alpha, dims) >= 0
+    # MPI gatherv cost grows with replica count; PS pull does not
+    bigger = cm.MeshDims(model=model, data=data * 2)
+    assert cm.sparse_mpi_bytes(b, alpha, bigger) > \
+        cm.sparse_mpi_bytes(b, alpha, dims)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.floats(1e4, 1e11), st.floats(1e-6, 0.2))
+def test_hybrid_never_worse_than_forced_modes(b, alpha):
+    """The hybrid pick is argmin over its family by construction."""
+    dims = cm.MeshDims(model=16, data=16, pod=2)
+    method, costs = cm.choose_method(b=b, sparse=True, alpha=alpha,
+                                     dims=dims, comm_mode="hybrid")
+    assert costs[method] <= costs["mpi_gatherv"] + 1e-9

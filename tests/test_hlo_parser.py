@@ -1,0 +1,75 @@
+"""HLO analyzer: trip-count multipliers, dot FLOPs, collective accounting."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.utils.hlo import analyze_hlo, _shape_bytes, _ring_factor
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[4,8]{1,0}") == 128
+    assert _shape_bytes("bf16[10]") == 20
+    assert _shape_bytes("(f32[2,2]{1,0}, s32[4])") == 32
+    assert _shape_bytes("pred[]") == 1
+
+
+def test_ring_factors():
+    assert _ring_factor("all-reduce", 4) == pytest.approx(1.5)
+    assert _ring_factor("all-gather", 4) == pytest.approx(0.75)
+    assert _ring_factor("all-reduce", 1) == 0.0
+
+
+def test_scan_trip_count_correction():
+    """cost_analysis counts a scan body once; the parser must multiply."""
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    xs = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 32, 32), jnp.float32)
+    compiled = jax.jit(f).lower(xs, ws).compile()
+    s = analyze_hlo(compiled.as_text())
+    want = 5 * 2 * 64 * 32 * 32
+    assert abs(s.dot_flops - want) / want < 1e-6
+    # XLA's own count misses the 5x
+    xla = compiled.cost_analysis()["flops"]
+    assert xla < s.dot_flops
+
+
+def test_nested_scan_multipliers():
+    def f(x, w):
+        def outer(c, wi):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ wi), None
+            c, _ = jax.lax.scan(inner, c, jnp.arange(3))
+            return c, None
+        y, _ = jax.lax.scan(outer, x, w)
+        return y.sum()
+
+    xs = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 16, 16), jnp.float32)
+    compiled = jax.jit(f).lower(xs, ws).compile()
+    s = analyze_hlo(compiled.as_text())
+    want = 4 * 3 * 2 * 16 * 16 * 16
+    assert abs(s.dot_flops - want) / want < 1e-6
+
+
+def test_canned_collective_parse():
+    text = """
+HloModule test
+
+ENTRY %main (p0: f32[16,8]) -> f32[16,8] {
+  %p0 = f32[16,8]{1,0} parameter(0)
+  %ar = f32[16,8]{1,0} all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %out = f32[16,8]{1,0} copy(%ar)
+}
+"""
+    s = analyze_hlo(text)
+    assert s.collective_count.get("all-reduce") == 1
+    assert s.collective_raw_bytes == 16 * 8 * 4
+    assert s.collective_bytes == pytest.approx(16 * 8 * 4 * 1.5)
+    # f32 wire-correction halves it
+    s2 = analyze_hlo(text, f32_collective_scale=0.5)
+    assert s2.collective_bytes == pytest.approx(16 * 8 * 4 * 0.75)

@@ -1,0 +1,91 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, as a
+REDUCED same-family config, runs one forward + one train step on CPU with
+shape and finiteness assertions. The FULL configs are exercised only by the
+dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (ALL_ARCHS, PAPER_ARCHS, RunConfig, ShapeConfig,
+                           get_config, reduced)
+from repro.core.runtime import Runtime
+from repro.core.transform import analyze, get_runner
+from repro.data import SyntheticLM
+from repro.models.model import build_model
+
+RC = RunConfig(attention_impl="naive", remat="none")
+SHAPE = ShapeConfig("tiny", seq_len=32, global_batch=2, kind="train")
+
+
+def _dataset(cfg):
+    return SyntheticLM(cfg.vocab_size, SHAPE.seq_len, SHAPE.global_batch,
+                       is_encdec=cfg.is_encdec,
+                       frames_dim=cfg.d_model if cfg.family == "audio" else 0,
+                       frames_len=8)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS + PAPER_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = reduced(get_config(arch))
+    runner = get_runner(cfg, SHAPE, RC)
+    ds = _dataset(cfg)
+    m = runner.run(ds.batch(0))
+    assert np.isfinite(float(m["loss"])), (arch, m)
+    m = runner.run(ds.batch(1))
+    assert np.isfinite(float(m["loss"])), (arch, m)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_shapes(arch):
+    cfg = reduced(get_config(arch))
+    rt = Runtime(cfg, RC, SHAPE)
+    model = build_model(cfg, rt)
+    params = model.init(jax.random.key(0))
+    batch = {k: jnp.asarray(v) for k, v in _dataset(cfg).batch(0).items()}
+    logits, _, _ = model.prefill_fn(params, batch)
+    assert logits.shape[0] == SHAPE.global_batch
+    assert logits.shape[1] == SHAPE.seq_len
+    assert logits.shape[2] >= cfg.vocab_size          # padded vocab allowed
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+
+
+@pytest.mark.parametrize("arch", ["phi3-medium-14b", "rwkv6-7b",
+                                  "hymba-1.5b", "grok-1-314b",
+                                  "seamless-m4t-medium"])
+def test_decode_step_smoke(arch):
+    """One serve_step against a small cache: shapes + finiteness."""
+    cfg = reduced(get_config(arch))
+    rt = Runtime(cfg, RC, ShapeConfig("d", 32, 2, "decode"))
+    model = build_model(cfg, rt)
+    params = model.init(jax.random.key(0))
+    cache = model.init_cache(2, 32)
+    toks = jnp.zeros((2, 1), jnp.int32)
+    logits, new_cache = model.decode_fn(params, cache, toks,
+                                        jnp.asarray(3, jnp.int32))
+    assert logits.shape[:2] == (2, 1)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+def test_decode_matches_prefill_logits():
+    """Teacher-forced decode reproduces the prefill logits (KV-cache path
+    equals the parallel path) — the serving-correctness invariant."""
+    cfg = reduced(get_config("phi3-medium-14b"))
+    rc32 = RunConfig(attention_impl="naive", remat="none",
+                     param_dtype="float32", compute_dtype="float32")
+    rt = Runtime(cfg, rc32, ShapeConfig("d", 16, 2, "decode"))
+    model = build_model(cfg, rt)
+    params = model.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab_size)
+    full_logits, _, _ = model.prefill_fn(params, {"tokens": toks})
+    cache = model.init_cache(2, 16)
+    outs = []
+    for t in range(8):
+        lg, cache = model.decode_fn(params, cache, toks[:, t:t + 1],
+                                    jnp.asarray(t, jnp.int32))
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=2e-2, atol=2e-2)

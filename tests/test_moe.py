@@ -1,0 +1,94 @@
+"""MoE: routing/capacity invariants and identity-expert equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import distributed_run
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.core.runtime import Runtime
+from repro.models import moe as moe_mod
+from repro.models.layers import init_tree
+
+
+def _setup(e=4, k=1, cf=8.0, d=16, f=32):
+    cfg = reduced(get_config("grok-1-314b"), d_model=d, d_ff=f, experts=e)
+    cfg = type(cfg)(**{**cfg.__dict__, "experts_per_token": k,
+                       "moe_capacity_factor": cf})
+    rt = Runtime(cfg, RunConfig(attention_impl="naive", remat="none",
+                                compute_dtype="float32",
+                                param_dtype="float32",
+                                wire_dtype="float32"),
+                 ShapeConfig("t", 8, 2, "train"))
+    params = init_tree(jax.random.key(0), moe_mod.moe_specs(cfg, "tp"),
+                       jnp.float32)
+    return cfg, rt, params
+
+
+def test_identical_experts_equal_plain_ffn():
+    """With every expert's weights identical, routing must not matter:
+    MoE(x) == FFN(x) for any router decisions (capacity permitting)."""
+    cfg, rt, params = _setup(e=4, k=2, cf=8.0)
+    w0g = params["w_gate"][0]
+    for key in ("w_gate", "w_up", "w_down"):
+        params[key] = jnp.broadcast_to(params[key][0:1], params[key].shape)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model), jnp.float32)
+    out, metrics = moe_mod.moe_ffn(params, x, cfg=cfg, rt=rt, exec_mode="tp")
+    want = jax.nn.silu(x @ params["w_gate"][0]) * (x @ params["w_up"][0])
+    want = want @ params["w_down"][0]
+    assert int(metrics["moe_dropped"]) == 0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_no_drops_with_ample_capacity():
+    cfg, rt, params = _setup(e=4, k=2, cf=16.0)
+    x = jax.random.normal(jax.random.key(2), (2, 8, cfg.d_model), jnp.float32)
+    _, metrics = moe_mod.moe_ffn(params, x, cfg=cfg, rt=rt, exec_mode="tp")
+    assert int(metrics["moe_dropped"]) == 0
+
+
+def test_tiny_capacity_drops_and_reports():
+    cfg, rt, params = _setup(e=4, k=1, cf=0.3)
+    x = jax.random.normal(jax.random.key(3), (2, 8, cfg.d_model), jnp.float32)
+    out, metrics = moe_mod.moe_ffn(params, x, cfg=cfg, rt=rt, exec_mode="tp")
+    assert int(metrics["moe_dropped"]) > 0
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_ep_equals_tp_distributed():
+    """Expert-parallel a2a execution == tensor-parallel execution == local."""
+    code = """
+import jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.configs import get_config, reduced, RunConfig, ShapeConfig
+from repro.core.runtime import Runtime
+from repro.models import moe as moe_mod
+from repro.models.layers import init_tree
+
+cfg0 = reduced(get_config("grok-1-314b"), d_model=16, d_ff=32, experts=8)
+cfg = type(cfg0)(**{**cfg0.__dict__, "experts_per_token": 2,
+                    "moe_capacity_factor": 8.0})
+rc = RunConfig(attention_impl="naive", remat="none", compute_dtype="float32",
+               param_dtype="float32", wire_dtype="float32")
+shape = ShapeConfig("t", 8, 4, "train")
+
+rt0 = Runtime(cfg, rc, shape)
+params = init_tree(jax.random.key(0), moe_mod.moe_specs(cfg, "tp"),
+                   jnp.float32)
+x = jax.random.normal(jax.random.key(1), (4, 8, cfg.d_model), jnp.float32)
+ref, _ = moe_mod.moe_ffn(params, x, cfg=cfg, rt=rt0, exec_mode="tp")
+
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+out = {}
+with jax.set_mesh(mesh):
+    for mode in ("tp", "ep"):
+        rt = Runtime(cfg, rc, shape, mesh=mesh)
+        got, m = jax.jit(lambda p, xx: moe_mod.moe_ffn(
+            p, xx, cfg=cfg, rt=rt, exec_mode=mode))(params, x)
+        out[mode] = float(jnp.abs(got - ref).max())
+print("RESULT:" + json.dumps(out))
+"""
+    res = distributed_run(code, devices=8, timeout=600)
+    assert res["tp"] < 1e-4, res
+    assert res["ep"] < 1e-4, res

@@ -1,0 +1,61 @@
+"""§Perf optimizations must not change math: explicit-SP and the dp dense
+strategy reproduce the single-device result exactly (f32)."""
+import pytest
+
+from conftest import distributed_run
+
+CODE = """
+from jax.sharding import AxisType
+from repro.configs import get_config, reduced, RunConfig, ShapeConfig
+from repro.core.transform import get_runner
+from repro.data import SyntheticLM
+
+cfg = reduced(get_config("__ARCH__"))
+shape = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
+kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
+          compute_dtype="float32", wire_dtype="float32")
+ds = SyntheticLM(cfg.vocab_size, 32, 8)
+ref = get_runner(cfg, shape, RunConfig(**kw))
+ref_losses = [float(ref.run(ds.batch(i))["loss"]) for i in range(3)]
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+with jax.set_mesh(mesh):
+    run = get_runner(cfg, shape, RunConfig(**kw, __FLAGS__), mesh=mesh)
+    losses = [float(run.run(ds.batch(i))["loss"]) for i in range(3)]
+print("RESULT:" + json.dumps({
+    "diff": max(abs(a - b) for a, b in zip(ref_losses, losses)),
+    "methods": run.plan.methods()}))
+"""
+
+
+@pytest.mark.parametrize("arch,flags", [
+    ("phi3-medium-14b", "explicit_sp=True"),
+    ("command-r-35b", "explicit_sp=True"),      # tied embeddings + SP
+    ("phi3-medium-14b", 'dense_strategy="dp"'),
+    ("hymba-1.5b", 'dense_strategy="dp"'),
+    ("rwkv6-7b", 'dense_strategy="dp"'),
+    ("phi3-medium-14b", 'explicit_sp=True, dense_strategy="auto"'),
+])
+def test_perf_paths_exact(arch, flags):
+    res = distributed_run(
+        CODE.replace("__ARCH__", arch).replace("__FLAGS__", flags),
+        devices=8, timeout=600)
+    assert res["diff"] < 2e-5, res
+
+
+def test_auto_strategy_picks_sensibly():
+    code = """
+from repro.configs import get_config, SHAPES
+from repro.core.cost_model import MeshDims, pick_dense_strategy
+dims = MeshDims(model=16, data=16)
+out = {a: pick_dense_strategy(get_config(a), SHAPES["train_4k"], dims)
+       for a in ("hymba-1.5b", "phi3-medium-14b", "grok-1-314b",
+                 "llama4-maverick-400b-a17b")}
+out["decode"] = pick_dense_strategy(get_config("hymba-1.5b"),
+                                    SHAPES["decode_32k"], dims)
+print("RESULT:" + json.dumps(out))
+"""
+    res = distributed_run(code, devices=8)
+    assert res["hymba-1.5b"] == "dp"
+    assert res["grok-1-314b"] == "tp"            # MoE needs the model axis
+    assert res["llama4-maverick-400b-a17b"] == "tp"
+    assert res["decode"] == "tp"                 # decode keeps cache sharding

@@ -1,0 +1,96 @@
+"""End-to-end behaviour: training converges, serving drains, resume works."""
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.core.transform import get_runner
+from repro.data import SyntheticLM
+
+
+def test_train_loss_decreases(tiny_shape):
+    cfg = reduced(get_config("phi3-medium-14b"))
+    runner = get_runner(cfg, tiny_shape,
+                        RunConfig(attention_impl="naive", remat="none",
+                                  learning_rate=3e-3))
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch)
+    losses = [float(runner.run(ds.batch(i))["loss"]) for i in range(20)]
+    assert all(np.isfinite(losses))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+
+
+def test_trainer_checkpoint_resume(tmp_path, tiny_shape):
+    from repro.runtime.trainer import Trainer, TrainerConfig
+    cfg = reduced(get_config("stablelm-12b"))
+    rc = RunConfig(attention_impl="naive", remat="none")
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch)
+    tcfg = TrainerConfig(total_steps=6, ckpt_dir=str(tmp_path / "ckpt"),
+                         ckpt_every=3)
+    seen = {}
+    t1 = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    t1.run(on_metrics=lambda s, m: seen.setdefault(s, m["loss"]))
+    t1.ckpt.wait()
+    assert t1.ckpt.last_committed == 6
+
+    # resume from step 6 and train 3 more — deterministic data continuation
+    tcfg2 = TrainerConfig(total_steps=9, ckpt_dir=str(tmp_path / "ckpt"),
+                          ckpt_every=100)
+    t2 = Trainer(cfg, tiny_shape, rc, tcfg2, ds)
+    t2.maybe_restore()
+    assert t2.step == 6
+    t2.run()
+    assert t2.step == 9
+
+
+def test_trainer_retries_after_failure(tmp_path, tiny_shape):
+    from repro.runtime.trainer import Trainer, TrainerConfig
+    cfg = reduced(get_config("phi3-medium-14b"), layers=1)
+    rc = RunConfig(attention_impl="naive", remat="none")
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch)
+    tcfg = TrainerConfig(total_steps=4, ckpt_dir=str(tmp_path / "c"),
+                         ckpt_every=1, max_retries=2)
+    t = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    real_step = t.train_step
+    boom = {"armed": False}
+
+    def flaky(state, batch):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected node failure")
+        return real_step(state, batch)
+
+    t.train_step = flaky
+    t.run()           # warms checkpoints
+    boom["armed"] = True
+    t.tcfg = TrainerConfig(total_steps=8, ckpt_dir=str(tmp_path / "c"),
+                           ckpt_every=1, max_retries=2)
+    t.run()           # hits the failure, restores, finishes
+    assert t.step == 8
+
+
+def test_server_drains_and_is_deterministic():
+    from repro.runtime.server import Request, Server, ServerConfig
+    cfg = reduced(get_config("phi3-medium-14b"), layers=1)
+
+    def run_once():
+        rng = np.random.default_rng(0)
+        server = Server(cfg, RunConfig(attention_impl="naive"),
+                        ServerConfig(max_batch=2, max_seq=64))
+        for i in range(5):
+            server.submit(Request(uid=i,
+                                  prompt=rng.integers(0, cfg.vocab_size, 4,
+                                                      dtype=np.int32),
+                                  max_new_tokens=4))
+        done = server.run_until_drained()
+        return {r.uid: tuple(r.out_tokens) for r in done}
+
+    a = run_once()
+    b = run_once()
+    assert len(a) == len(b) == 5
+    assert all(len(v) == 4 for v in a.values())
+    # token-level equality can flip on argmax near-ties under XLA CPU's
+    # reduction reassociation; require >= 90% agreement across runs
+    agree = sum(x == y for k in a for x, y in zip(a[k], b[k]))
+    assert agree >= 18, (a, b)

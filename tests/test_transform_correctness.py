@@ -1,0 +1,102 @@
+"""The paper's correctness property (§3.1/§7.2), asserted exactly:
+
+    synchronous data-parallel training ≡ single-device training
+    at equal global batch,
+
+for every communication mode (hybrid / ps / mpi) and for every optimization
+flag (LA / OPAU / OPSW) — the optimizations must change bytes-on-wire, never
+math. Runs on 8 fake devices in a subprocess (main session keeps 1 device).
+"""
+import pytest
+
+from conftest import distributed_run
+
+_CODE = """
+from jax.sharding import AxisType
+from repro.configs import get_config, reduced, RunConfig, ShapeConfig
+from repro.core.transform import get_runner
+from repro.data import SyntheticLM
+
+import dataclasses
+cfg = reduced(get_config("{arch}"))
+if cfg.n_experts:
+    # ample capacity: token dropping is partition-dependent (as in every
+    # capacity-bounded MoE system) and would break exact equality
+    cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
+          compute_dtype="float32", wire_dtype="float32")
+if cfg.n_experts:
+    # adam's sign(g)-like update amplifies f32 reduction-order noise on
+    # near-zero grads; sgd keeps the comparison a direct gradient check
+    kw["optimizer"] = "sgd"; kw["learning_rate"] = 0.3
+ds = SyntheticLM(cfg.vocab_size, 32, 4, is_encdec=cfg.is_encdec,
+                 frames_dim=cfg.d_model if cfg.family == "audio" else 0,
+                 frames_len=8)
+
+ref = get_runner(cfg, shape, RunConfig(**kw))
+ref_losses = [float(ref.run(ds.batch(i))["loss"]) for i in range(3)]
+
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+out = {{"ref": ref_losses}}
+for name, flags in {flag_sets}.items():
+    with jax.set_mesh(mesh):
+        run = get_runner(cfg, shape, RunConfig(**kw, **flags), mesh=mesh)
+        out[name] = [float(run.run(ds.batch(i))["loss"]) for i in range(3)]
+print("RESULT:" + json.dumps(out))
+"""
+
+FLAG_SETS = {
+    "hybrid": {"comm_mode": "hybrid"},
+    "ps": {"comm_mode": "ps"},
+    "mpi": {"comm_mode": "mpi"},
+    "no_la": {"comm_mode": "hybrid", "local_agg": False},
+    "no_opau": {"comm_mode": "hybrid", "opau": False},
+    "no_opsw": {"comm_mode": "hybrid", "opsw": False},
+}
+
+
+@pytest.mark.parametrize("arch", ["phi3-medium-14b", "command-r-35b",
+                                  "rwkv6-7b", "grok-1-314b"])
+def test_distributed_equals_single_device(arch):
+    sets = FLAG_SETS if arch == "phi3-medium-14b" else \
+        {k: FLAG_SETS[k] for k in ("hybrid", "mpi")}
+    res = distributed_run(_CODE.format(arch=arch, flag_sets=repr(sets)),
+                          devices=8, timeout=600)
+    ref = res.pop("ref")
+    for name, losses in res.items():
+        for i, (a, b) in enumerate(zip(ref, losses)):
+            # f32 end-to-end: only reduction-order drift is allowed
+            assert abs(a - b) < 5e-4 + 1e-4 * i, \
+                (arch, name, i, ref, losses)
+
+
+def test_clip_after_aggregation_semantics():
+    """Gradient clipping must act on the *aggregated* gradient (paper §3.1):
+    per-replica clipping gives a mathematically different (wrong) update.
+    We assert our transform matches the aggregate-then-clip oracle even when
+    per-replica norms would exceed the bound."""
+    code = """
+import jax.numpy as jnp
+from repro.configs import get_config, reduced, RunConfig, ShapeConfig
+from repro.core.transform import get_runner
+from repro.data import SyntheticLM
+from jax.sharding import AxisType
+
+cfg = reduced(get_config("phi3-medium-14b"), layers=1)
+shape = ShapeConfig("tiny", seq_len=16, global_batch=4, kind="train")
+kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
+          compute_dtype="float32", wire_dtype="float32", clip_norm=0.05,
+          learning_rate=0.05)
+ds = SyntheticLM(cfg.vocab_size, 16, 4)
+ref = get_runner(cfg, shape, RunConfig(**kw))
+ref_out = [float(ref.run(ds.batch(i))["grad_norm"]) for i in range(2)]
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+with jax.set_mesh(mesh):
+    run = get_runner(cfg, shape, RunConfig(**kw), mesh=mesh)
+    dist_out = [float(run.run(ds.batch(i))["grad_norm"]) for i in range(2)]
+print("RESULT:" + json.dumps({"ref": ref_out, "dist": dist_out}))
+"""
+    res = distributed_run(code, devices=8, timeout=600)
+    for a, b in zip(res["ref"], res["dist"]):
+        assert abs(a - b) / max(abs(a), 1e-9) < 1e-3, res

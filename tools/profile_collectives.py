@@ -1,0 +1,46 @@
+"""Dump the largest collectives (with op_name provenance) for one dry-run cell."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, sys, argparse, collections
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import RunConfig, SHAPES, get_config
+from repro.launch.dryrun import lower_cell
+from repro.utils.hlo import parse_module, _multipliers, _shape_bytes, _COLLECTIVE_KINDS
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", required=True)
+ap.add_argument("--shape", required=True)
+ap.add_argument("--multi-pod", action="store_true")
+ap.add_argument("--remat", default="block")
+ap.add_argument("--comm-mode", default="hybrid")
+ap.add_argument("--top", type=int, default=25)
+args = ap.parse_args()
+
+compiled, rt, plan, model = lower_cell(
+    args.arch, args.shape, multi_pod=args.multi_pod,
+    run_cfg=RunConfig(comm_mode=args.comm_mode, capacity_mode="capped",
+                      remat=args.remat))
+text = compiled.as_text()
+comps, entry, _ = parse_module(text)
+mult, _ = _multipliers(comps, entry)
+rows = []
+for cname, comp in comps.items():
+    m = mult.get(cname, 0.0)
+    if not m: continue
+    for op in comp.ops:
+        kind = next((c for c in _COLLECTIVE_KINDS
+                     if op.kind in (c, c + "-start")), None)
+        if kind is None: continue
+        b = _shape_bytes(op.type_str) * m
+        mm = re.search(r'op_name="([^"]+)"', op.line)
+        src = mm.group(1) if mm else "?"
+        src = re.sub(r'jit\(\w+\)/', '', src)[:140]
+        rows.append((b, m, kind, op.type_str[:48], src))
+rows.sort(reverse=True)
+agg = collections.defaultdict(float)
+for b, m, kind, t, src in rows:
+    agg[kind] += b
+print({k: f"{v/1e9:.1f}GB" for k, v in agg.items()})
+for b, m, kind, t, src in rows[:args.top]:
+    print(f"{b/1e9:8.2f}GB x{int(m):4d} {kind:18s} {t:48s} {src}")

@@ -1,0 +1,37 @@
+"""Dump the largest dot-FLOP contributors for one dry-run cell."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, sys, argparse, collections
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.configs import RunConfig
+from repro.launch.dryrun import lower_cell
+from repro.utils.hlo import parse_module, _multipliers, _dot_flops
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", required=True)
+ap.add_argument("--shape", required=True)
+ap.add_argument("--explicit-sp", action="store_true")
+ap.add_argument("--top", type=int, default=15)
+args = ap.parse_args()
+
+compiled, rt, plan, model = lower_cell(
+    args.arch, args.shape, multi_pod=False,
+    run_cfg=RunConfig(capacity_mode="capped", remat="full",
+                      explicit_sp=args.explicit_sp))
+comps, entry, sym = parse_module(compiled.as_text())
+mult, _ = _multipliers(comps, entry)
+rows = []
+for cname, comp in comps.items():
+    m = mult.get(cname, 0.0)
+    if not m: continue
+    for op in comp.ops:
+        if op.kind in ("dot", "dot-general"):
+            fl = _dot_flops(op, sym) * m
+            mm = re.search(r'op_name="([^"]+)"', op.line)
+            src = re.sub(r'jit\(\w+\)/', '', mm.group(1))[:110] if mm else "?"
+            rows.append((fl, m, src))
+rows.sort(reverse=True)
+total = sum(r[0] for r in rows)
+print(f"total dot flops/chip: {total:.3e}")
+for fl, m, src in rows[:args.top]:
+    print(f"{fl:.2e} x{int(m):4d}  {src}")
