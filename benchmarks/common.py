@@ -21,6 +21,9 @@ def run_with_devices(code: str, devices: int = 512, timeout: int = 900) -> dict:
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
         import json
         import jax
+        from repro.compat import (AxisType, NamedSharding, PartitionSpec,
+                                  make_mesh, use_mesh)
+        P = PartitionSpec
     """)
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")

@@ -35,7 +35,7 @@ step = make_train_step(model, opt, rt, plan)
 state = jax.eval_shape(opt.init, model.abstract_params())
 sh = state_shardings(plan, state)
 bs = batch_shardings(plan, model.input_specs(shape))
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     compiled = jax.jit(step, in_shardings=(sh, bs), out_shardings=(sh, None),
                        donate_argnums=0).lower(
         state, model.input_specs(shape)).compile()

@@ -15,13 +15,11 @@ from repro.core import cost_model as cm
 
 CODE = """
 import jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
 from repro.core.embedding import EmbedCtx, lookup
 from repro.utils.hlo import analyze_hlo
 
 V, E, B, S = 65536, 512, 256, 256     # ~64k-row table, 512-dim rows
-mesh = jax.make_mesh((16, 16), ("data", "model"),
-                     axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((16, 16), ("data", "model"))
 ctx = EmbedCtx(mesh=mesh, method="__METHOD__", batch_axes=("data",),
                model_axis="model", vocab_padded=V, wire_dtype=jnp.bfloat16,
                local_agg=__LA__, exact=False)
@@ -34,7 +32,7 @@ def step(table, ids):
 tspec = P(None, None) if ctx.method == "mpi_gatherv" else P("model", None)
 table = jax.ShapeDtypeStruct((V, E), jnp.bfloat16)
 ids = jax.ShapeDtypeStruct((B, S), jnp.int32)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     g = jax.jit(jax.grad(step), in_shardings=(
         NamedSharding(mesh, tspec), NamedSharding(mesh, P("data", None))))
     compiled = g.lower(table, ids).compile()

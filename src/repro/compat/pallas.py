@@ -1,0 +1,13 @@
+"""Pallas naming drift.
+
+``pltpu.CompilerParams`` (new JAX) was ``pltpu.TPUCompilerParams`` on 0.4.x;
+the constructor signature (dimension_semantics, vmem_limit_bytes, ...) is the
+same. Kernels import the alias from here instead of pltpu directly.
+"""
+from __future__ import annotations
+
+from jax.experimental import pallas as pl  # noqa: F401  (re-export)
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401  (re-export)
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -34,7 +34,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import Mesh, P, shard_map
 
 
 @dataclass(frozen=True)
@@ -188,7 +189,7 @@ def _lookup_fwd_impl(table, ids, ctx: EmbedCtx, capacity: int):
     ba = ctx.batch_axes or None
     table_spec = P(None, None) if ctx.method == "mpi_gatherv" \
         else P(ctx.model_axis, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda t, i: _fwd_local(t, i, ctx, capacity),
         mesh=ctx.mesh,
         in_specs=(table_spec, P(ba, None)),
@@ -218,7 +219,7 @@ def _lookup_bwd(ctx: EmbedCtx, capacity: int, res, cts):
         ba = ctx.batch_axes or None
         table_spec = P(None, None) if ctx.method == "mpi_gatherv" \
             else P(ctx.model_axis, None)
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda u, i, d: _bwd_local(u, i, d, vs, ctx),
             mesh=ctx.mesh,
             in_specs=(P(ba, None), P(ba, None), P(ba, None, None)),

@@ -27,8 +27,8 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import Mesh, NamedSharding, P
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.models.layers import ParamSpec
 
@@ -114,7 +114,9 @@ class MeshRules:
                     if cand:
                         size = math.prod(self.mesh.shape[a] for a in cand)
                         if shape is None or shape[i] % size == 0:
-                            entry = cand
+                            # single axes stay unwrapped: old JAX compares
+                            # P(('model',)) != P('model') (no canonicalization)
+                            entry = cand[0] if len(cand) == 1 else cand
                             used.update(cand)
             out.append(entry)
         return P(*out)

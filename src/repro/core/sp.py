@@ -27,7 +27,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import Mesh, P, shard_map
 
 
 @dataclass(frozen=True)
@@ -91,7 +92,7 @@ def _proj_in_fwd(ctx: SpCtx, x, *ws):
     out_specs = tuple(
         P(ba, None, ctx.model_axis if s else None)
         for s in ctx.n_out_sharded)
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda x_loc, *w: _in_fwd_local(x_loc, w, ctx)[0],
         mesh=ctx.mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False)
@@ -117,7 +118,7 @@ def _proj_in_bwd(ctx: SpCtx, res, d_ys):
         return tuple(o.astype(a.dtype) for o, a in
                      zip(outs, (x_loc,) + tuple(w_loc)))
 
-    fn = jax.shard_map(body, mesh=ctx.mesh, in_specs=in_specs,
+    fn = shard_map(body, mesh=ctx.mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     return fn(x, *ws, *d_ys)
 
@@ -143,7 +144,7 @@ def _proj_out_fwd(ctx: SpCtx, h, w):
                                    scatter_dimension=1, tiled=True)
         return out.astype(h_loc.dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(ba, None, ctx.model_axis), P(ctx.model_axis, None)),
         out_specs=P(ba, ctx.model_axis, None), check_vma=False)
@@ -164,7 +165,7 @@ def _proj_out_bwd(ctx: SpCtx, res, d_out):
             d_w = jax.lax.psum(d_w, ctx.batch_axes)
         return d_h, d_w.astype(w_loc.dtype)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(ba, None, ctx.model_axis), P(ctx.model_axis, None),
                   P(ba, ctx.model_axis, None)),
@@ -202,7 +203,7 @@ def _local_proj_fwd(ctx: SpCtx, x, *ws):
             for wi in w)
         return ys
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(ba, ctx.model_axis, None),) + (P(None, None),) * len(ws),
         out_specs=tuple(P(ba, None, None) for _ in ws), check_vma=False)
@@ -230,7 +231,7 @@ def _local_proj_bwd(ctx: SpCtx, res, d_ys):
             d_ws.append(d_w.astype(wi.dtype))
         return (d_x,) + tuple(d_ws)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(P(ba, ctx.model_axis, None),) + (P(None, None),) * len(ws)
         + tuple(P(ba, None, None) for _ in ws),

@@ -20,8 +20,9 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+from repro.compat import Mesh, NamedSharding, P
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core import cost_model, sparsity
 from repro.core.plan import (MeshRules, ParamPlan, Plan, add_fsdp,
@@ -248,11 +249,16 @@ def get_runner(model_cfg: ModelConfig, shape_cfg: ShapeConfig,
     params = model.init(jax.random.key(seed))
     state = optimizer.init(params)
     if mesh is not None:
-        shardings = state_shardings(plan, state)
-        state = jax.device_put(state, shardings)
-        bs = batch_shardings(plan, model.input_specs())
-        step = jax.jit(step, in_shardings=(shardings, bs),
-                       out_shardings=(shardings, None), donate_argnums=0)
+        # every sharding below names the mesh explicitly, so the pjit path
+        # needs no ambient mesh; on explicit-sharding JAX use_mesh gives
+        # callers who didn't wrap get_runner the set_mesh placement
+        # semantics, and on older JAX it is a no-op context.
+        with compat.use_mesh(mesh):
+            shardings = state_shardings(plan, state)
+            state = jax.device_put(state, shardings)
+            bs = batch_shardings(plan, model.input_specs())
+            step = jax.jit(step, in_shardings=(shardings, bs),
+                           out_shardings=(shardings, None), donate_argnums=0)
     else:
         step = jax.jit(step, donate_argnums=0)
     return Runner(model=model, optimizer=optimizer, plan=plan, rt=rt,

@@ -12,7 +12,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import Mesh, P, shard_map
 
 
 def _xent_local(logits, labels, *, model_axis: str, vocab: int, shards: int):
@@ -52,7 +53,7 @@ def sharded_xent(logits: jax.Array, labels: jax.Array, *,
         # plain local xent; GSPMD shards it over the batch dims
         return _xent_local(logits, labels, model_axis="", vocab=vocab, shards=1)
     shards = mesh.shape[model_axis]
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda lg, lb: _xent_local(lg, lb, model_axis=model_axis,
                                    vocab=vocab, shards=shards),
         mesh=mesh,

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat.pallas import CompilerParams
+
 # fp32 holds e^87; clamping at 80 keeps the factored-form pieces finite.
 # Exact when per-token |log-decay| * chunk <= 80 (RWKV6 trained decays are
 # < 2.7/token, so chunk=32 is exact; tokens decayed below e^-80 are zero).
@@ -95,7 +97,7 @@ def wkv(r, k, v, lw, bonus, state, *, chunk: int = 32,
         out_shape=[jax.ShapeDtypeStruct((b, h, sp, e), r.dtype),
                    jax.ShapeDtypeStruct((b, h, e, e), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((e, e), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(rt, kt, vt, lwt, bonus, state)

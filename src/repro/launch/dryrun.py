@@ -17,8 +17,8 @@ from dataclasses import replace
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import NamedSharding, P, cost_analysis, use_mesh
 from repro.configs import (RunConfig, SHAPES, ALL_ARCHS, get_config,
                            shapes_for)
 from repro.core.runtime import Runtime
@@ -56,7 +56,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     rt.plan = plan
     optimizer = make_optimizer(rt)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "train":
             step = make_train_step(model, optimizer, rt, plan)
             state = _abstract_state(model, optimizer)
@@ -109,7 +109,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     compile_s = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis(compiled)
     cfg = get_config(arch)
     hlo = analyze_hlo(compiled.as_text(),
                       f32_collective_scale=0.5 if run_cfg.opsw else 1.0)

@@ -29,8 +29,10 @@ if ARGS.devices:
         + os.environ.get("XLA_FLAGS", ""))
 
 import time  # noqa: E402
+import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs import RunConfig, get_config, reduced  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 from repro.runtime.server import Request, Server, ServerConfig  # noqa: E402
@@ -38,6 +40,8 @@ from repro.runtime.server import Request, Server, ServerConfig  # noqa: E402
 
 def main():
     args = ARGS
+    print(f"jax {jax.__version__}  devices={jax.device_count()}  "
+          f"explicit_sharding={compat.has_explicit_sharding()}")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)

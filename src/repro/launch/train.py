@@ -46,6 +46,7 @@ if ARGS.devices:
 import logging  # noqa: E402
 import jax  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs import RunConfig, ShapeConfig, get_config, reduced  # noqa: E402
 from repro.data.pipeline import SyntheticLM  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
@@ -55,6 +56,8 @@ from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: E402
 def main():
     logging.basicConfig(level=logging.INFO,
                         format="%(asctime)s %(name)s %(message)s")
+    print(f"jax {jax.__version__}  devices={jax.device_count()}  "
+          f"explicit_sharding={compat.has_explicit_sharding()}")
     args = ARGS
     cfg = get_config(args.arch)
     if args.reduced:

@@ -20,8 +20,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
+from repro.compat import P, shard_map
 from repro.models.layers import ParamSpec
 
 
@@ -179,7 +179,7 @@ def moe_ffn(params: dict, x: jax.Array, *, cfg, rt, exec_mode: str,
         else:
             wspec = P(None, None, model_axis)
             wspec_down = P(None, model_axis, None)
-        fn = jax.shard_map(
+        fn = shard_map(
             local, mesh=mesh,
             in_specs=(P(batch_axes, seq_spec, None), P(), wspec, wspec, wspec_down),
             out_specs=(P(batch_axes, seq_spec, None), P(), P()),

@@ -71,18 +71,28 @@ class Server:
                 self.slot_req[i] = req
                 # teacher-forced prefill: feed prompt tokens one by one
                 # through the decode step (cache fills as a side effect).
+                # Other active slots' pending tokens must survive the
+                # prefill (they are zeroed per step so only this slot
+                # writes meaningful cache rows) and be restored before the
+                # next shared decode step.
+                pending = self._tokens.copy()
                 for t in req.prompt[:-1]:
                     self._tokens[:] = 0
                     self._tokens[i, 0] = t
                     self._step_device()
                     self.slot_pos[i] += 1
+                self._tokens[:] = pending
                 self._tokens[i, 0] = req.prompt[-1]
 
     def _step_device(self):
         # single shared cache_len: homogeneous-position batch (decode_32k
-        # cell semantics); per-slot positions tracked host-side
+        # cell semantics); per-slot positions tracked host-side.
+        # _tokens must be COPIED: jnp.asarray can alias a numpy buffer
+        # zero-copy on CPU, and the slot loop mutates _tokens in place while
+        # the async dispatch may still read it (slots then see each other's
+        # tokens, nondeterministically).
         logits, self.cache = self.decode_step(
-            self.params, self.cache, jnp.asarray(self._tokens),
+            self.params, self.cache, jnp.asarray(self._tokens.copy()),
             jnp.asarray(int(self.slot_pos.max())))
         return logits
 

@@ -23,6 +23,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro import compat
 from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step,
                                    restore_checkpoint)
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
@@ -59,6 +60,7 @@ class Trainer:
         self.ckpt = AsyncCheckpointer(tcfg.ckpt_dir, tcfg.keep_ckpts) \
             if tcfg.ckpt_dir else None
         self.step = 0
+        log.debug("jax %s compat=%s", jax.__version__, compat.capabilities())
         self._build(mesh)
 
     # ------------------------------------------------------------------
@@ -76,12 +78,13 @@ class Trainer:
             params = self.model.init(jax.random.key(self.run_cfg.seed))
             state = self.optimizer.init(params)
         if mesh is not None:
-            self.shardings = state_shardings(self.plan, state)
-            state = jax.device_put(state, self.shardings)
-            bs = batch_shardings(self.plan, self.model.input_specs())
-            self.train_step = jax.jit(
-                step_fn, in_shardings=(self.shardings, bs),
-                out_shardings=(self.shardings, None), donate_argnums=0)
+            with compat.use_mesh(mesh):
+                self.shardings = state_shardings(self.plan, state)
+                state = jax.device_put(state, self.shardings)
+                bs = batch_shardings(self.plan, self.model.input_specs())
+                self.train_step = jax.jit(
+                    step_fn, in_shardings=(self.shardings, bs),
+                    out_shardings=(self.shardings, None), donate_argnums=0)
         else:
             self.shardings = None
             self.train_step = jax.jit(step_fn, donate_argnums=0)

@@ -204,11 +204,19 @@ def _multipliers(comps: dict, entry: str) -> tuple[dict, set]:
 def _dot_flops(op: Op, symbols: dict) -> float:
     out_dims = _shape_dims(op.type_str)
     out = math.prod(out_dims) if out_dims else 0
-    lhs_m = re.search(r"\(%?([\w.\-]+)", op.line[op.line.index(op.kind):])
+    # Operands start at "<kind>(" — NOT at the first occurrence of the kind
+    # substring: the op's own name usually contains it ("%dot.0 = ... dot("),
+    # which previously captured the lhs *type* token instead of its name and
+    # silently dropped the contraction factor. Optimized dumps also inline
+    # the operand type ("dot(f32[64,32]{1,0} %gte.4, ...)"); prefer it.
+    lhs_m = re.search(
+        r"\s" + re.escape(op.kind)
+        + r"\((?:([a-z0-9]+\[[0-9,]*\])(?:\{[^}]*\})?\s+)?%?([\w.\-]+)",
+        op.line)
     contracting = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
     if not lhs_m or not contracting:
         return 2.0 * out
-    lhs_type = symbols.get(lhs_m.group(1))
+    lhs_type = lhs_m.group(1) or symbols.get(lhs_m.group(2))
     if lhs_type is None:
         return 2.0 * out
     lhs_dims = _shape_dims(lhs_type)

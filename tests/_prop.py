@@ -1,0 +1,97 @@
+"""Property-test shim: real hypothesis when installed, otherwise a tiny
+deterministic fallback so the suite collects and runs offline.
+
+Usage (replaces ``from hypothesis import given, settings, strategies as st``):
+
+    from _prop import HAVE_HYPOTHESIS, given, settings, st
+
+The fallback implements only what this repo's tests use — ``integers``,
+``floats``, ``lists``, ``sampled_from`` — and draws a fixed number of
+pseudo-random examples from a seed derived from the test name, so failures
+reproduce across runs. It does NOT shrink; with hypothesis installed you get
+the real engine.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import inspect
+    import random
+    import zlib
+
+    _FALLBACK_EXAMPLES = 25   # per test, unless @settings caps lower
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            # log-uniform when the range spans decades (matches how the
+            # cost-model tests use wide float ranges), else uniform
+            import math
+            if min_value > 0 and max_value / min_value > 1e3:
+                lo, hi = math.log(min_value), math.log(max_value)
+                return _Strategy(lambda rng: math.exp(rng.uniform(lo, hi)))
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def given(*strategies):
+        def deco(fn):
+            def runner(*args, **kwargs):
+                n = min(getattr(runner, "_max_examples", _FALLBACK_EXAMPLES),
+                        _FALLBACK_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = random.Random(seed * 1000003 + i)
+                    drawn = [s.example(rng) for s in strategies]
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (fallback prop engine, "
+                            f"example {i}): {fn.__name__}{tuple(drawn)}"
+                        ) from e
+            # hand-copied metadata, NOT functools.wraps: wraps would expose
+            # the original signature via __wrapped__ and pytest would demand
+            # fixtures for the drawn parameters
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = fn.__qualname__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            runner.__signature__ = inspect.Signature()
+            runner._max_examples = _FALLBACK_EXAMPLES
+            return runner
+        return deco
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        def deco(fn):
+            if max_examples is not None and hasattr(fn, "_max_examples"):
+                fn._max_examples = max_examples
+            return fn
+        return deco

@@ -62,21 +62,21 @@ def test_async_checkpointer(tmp_path):
     assert step == 5
 
 
+@pytest.mark.distributed
 def test_elastic_restore_across_meshes(tmp_path):
     """Save on a 2x4 mesh, restore onto 8x1 and onto a single device —
     the node-failure / re-mesh path."""
     code = f"""
 import jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
 from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 w = jax.device_put(jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
                    NamedSharding(mesh, P("data", "model")))
 state = {{"w": w}}
 save_checkpoint(r"{tmp_path}", 7, state)
 
-mesh2 = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh2 = make_mesh((8,), ("data",))
 sh2 = {{"w": NamedSharding(mesh2, P("data", None))}}
 got, step, _ = restore_checkpoint(r"{tmp_path}", state, shardings=sh2)
 ok_mesh = bool((np.asarray(got["w"]) ==
@@ -91,6 +91,7 @@ print("RESULT:" + json.dumps({{"mesh": ok_mesh, "single": ok_single,
     assert res == {"mesh": True, "single": True, "step": 7}
 
 
+@pytest.mark.distributed
 def test_trainer_remesh_preserves_state(tmp_path):
     """Elastic re-mesh: live state survives a mesh change (8 -> 4 devices),
     training continues."""
@@ -98,25 +99,24 @@ def test_trainer_remesh_preserves_state(tmp_path):
 from repro.configs import get_config, reduced, RunConfig, ShapeConfig
 from repro.data import SyntheticLM
 from repro.runtime.trainer import Trainer, TrainerConfig
-from jax.sharding import AxisType
 
 cfg = reduced(get_config("phi3-medium-14b"), layers=1)
 shape = ShapeConfig("t", 16, 4, "train")
 rc = RunConfig(attention_impl="naive", remat="none")
 ds = SyntheticLM(cfg.vocab_size, 16, 4)
-mesh8 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh8 = make_mesh((2, 4), ("data", "model"))
 t = Trainer(cfg, shape, rc, TrainerConfig(total_steps=2), ds, mesh=mesh8)
-with jax.set_mesh(mesh8):
+with use_mesh(mesh8):
     t.run()
 w_before = np.asarray(jax.device_get(jax.tree.leaves(t.state.params)[0]),
                       np.float32)
-mesh4 = jax.make_mesh((2, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh4 = make_mesh((2, 2), ("data", "model"))
 t.remesh(mesh4)
 w_after = np.asarray(jax.device_get(jax.tree.leaves(t.state.params)[0]),
                      np.float32)
 same = bool(np.allclose(w_before, w_after))
 t.tcfg = TrainerConfig(total_steps=4)
-with jax.set_mesh(mesh4):
+with use_mesh(mesh4):
     t.run()
 print("RESULT:" + json.dumps({"same": same, "step": t.step}))
 """

@@ -1,6 +1,6 @@
 """Table 3 cost model: paper numbers, crossovers, and invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import cost_model as cm
 

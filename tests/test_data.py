@@ -1,6 +1,6 @@
 """The shard() API invariants: disjoint, union-complete, resumable."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.data.pipeline import SyntheticLM, shard
 

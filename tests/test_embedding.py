@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from conftest import distributed_run
 from repro.core.embedding import EmbedCtx, dedupe, lookup
@@ -78,16 +78,16 @@ def test_capped_capacity_drops_and_reports():
     assert (got == E).sum() == 10
 
 
+@pytest.mark.distributed
 @pytest.mark.parametrize("method", ["ps", "ps_gather", "mpi_gatherv"])
 def test_sharded_pull_push_matches_dense(method):
     """Distributed lookup fwd+bwd == dense oracle, per exchange method."""
     code = """
 import jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.core.embedding import EmbedCtx, lookup
 
 VOCAB, E = 64, 8
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 table = jax.random.normal(jax.random.key(0), (VOCAB, E), jnp.float32)
 ids = jax.random.randint(jax.random.key(1), (4, 16), 0, VOCAB)
 
@@ -99,7 +99,7 @@ def f(t):
     out, _ = lookup(t, ids, ctx=ctx, capacity=32)
     return jnp.sum(out * out), out
 
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     (loss, out), grad = jax.jit(jax.value_and_grad(f, has_aux=True))(table)
 
 def f_ref(t):

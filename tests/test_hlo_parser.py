@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.compat import cost_analysis
 from repro.utils.hlo import analyze_hlo, _shape_bytes, _ring_factor
 
 
@@ -34,7 +35,7 @@ def test_scan_trip_count_correction():
     want = 5 * 2 * 64 * 32 * 32
     assert abs(s.dot_flops - want) / want < 1e-6
     # XLA's own count misses the 5x
-    xla = compiled.cost_analysis()["flops"]
+    xla = cost_analysis(compiled)["flops"]
     assert xla < s.dot_flops
 
 

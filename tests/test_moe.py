@@ -56,11 +56,11 @@ def test_tiny_capacity_drops_and_reports():
     assert bool(jnp.all(jnp.isfinite(out)))
 
 
+@pytest.mark.distributed
 def test_ep_equals_tp_distributed():
     """Expert-parallel a2a execution == tensor-parallel execution == local."""
     code = """
 import jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.configs import get_config, reduced, RunConfig, ShapeConfig
 from repro.core.runtime import Runtime
 from repro.models import moe as moe_mod
@@ -79,9 +79,9 @@ params = init_tree(jax.random.key(0), moe_mod.moe_specs(cfg, "tp"),
 x = jax.random.normal(jax.random.key(1), (4, 8, cfg.d_model), jnp.float32)
 ref, _ = moe_mod.moe_ffn(params, x, cfg=cfg, rt=rt0, exec_mode="tp")
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 out = {}
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     for mode in ("tp", "ep"):
         rt = Runtime(cfg, rc, shape, mesh=mesh)
         got, m = jax.jit(lambda p, xx: moe_mod.moe_ffn(

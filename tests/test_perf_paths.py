@@ -5,7 +5,6 @@ import pytest
 from conftest import distributed_run
 
 CODE = """
-from jax.sharding import AxisType
 from repro.configs import get_config, reduced, RunConfig, ShapeConfig
 from repro.core.transform import get_runner
 from repro.data import SyntheticLM
@@ -17,8 +16,8 @@ kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
 ds = SyntheticLM(cfg.vocab_size, 32, 8)
 ref = get_runner(cfg, shape, RunConfig(**kw))
 ref_losses = [float(ref.run(ds.batch(i))["loss"]) for i in range(3)]
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
-with jax.set_mesh(mesh):
+mesh = make_mesh((2, 4), ("data", "model"))
+with use_mesh(mesh):
     run = get_runner(cfg, shape, RunConfig(**kw, __FLAGS__), mesh=mesh)
     losses = [float(run.run(ds.batch(i))["loss"]) for i in range(3)]
 print("RESULT:" + json.dumps({
@@ -35,6 +34,7 @@ print("RESULT:" + json.dumps({
     ("rwkv6-7b", 'dense_strategy="dp"'),
     ("phi3-medium-14b", 'explicit_sp=True, dense_strategy="auto"'),
 ])
+@pytest.mark.distributed
 def test_perf_paths_exact(arch, flags):
     res = distributed_run(
         CODE.replace("__ARCH__", arch).replace("__FLAGS__", flags),
@@ -42,6 +42,7 @@ def test_perf_paths_exact(arch, flags):
     assert res["diff"] < 2e-5, res
 
 
+@pytest.mark.distributed
 def test_auto_strategy_picks_sensibly():
     code = """
 from repro.configs import get_config, SHAPES

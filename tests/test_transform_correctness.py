@@ -12,7 +12,6 @@ import pytest
 from conftest import distributed_run
 
 _CODE = """
-from jax.sharding import AxisType
 from repro.configs import get_config, reduced, RunConfig, ShapeConfig
 from repro.core.transform import get_runner
 from repro.data import SyntheticLM
@@ -37,10 +36,10 @@ ds = SyntheticLM(cfg.vocab_size, 32, 4, is_encdec=cfg.is_encdec,
 ref = get_runner(cfg, shape, RunConfig(**kw))
 ref_losses = [float(ref.run(ds.batch(i))["loss"]) for i in range(3)]
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 out = {{"ref": ref_losses}}
 for name, flags in {flag_sets}.items():
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         run = get_runner(cfg, shape, RunConfig(**kw, **flags), mesh=mesh)
         out[name] = [float(run.run(ds.batch(i))["loss"]) for i in range(3)]
 print("RESULT:" + json.dumps(out))
@@ -58,6 +57,7 @@ FLAG_SETS = {
 
 @pytest.mark.parametrize("arch", ["phi3-medium-14b", "command-r-35b",
                                   "rwkv6-7b", "grok-1-314b"])
+@pytest.mark.distributed
 def test_distributed_equals_single_device(arch):
     sets = FLAG_SETS if arch == "phi3-medium-14b" else \
         {k: FLAG_SETS[k] for k in ("hybrid", "mpi")}
@@ -71,6 +71,7 @@ def test_distributed_equals_single_device(arch):
                 (arch, name, i, ref, losses)
 
 
+@pytest.mark.distributed
 def test_clip_after_aggregation_semantics():
     """Gradient clipping must act on the *aggregated* gradient (paper §3.1):
     per-replica clipping gives a mathematically different (wrong) update.
@@ -81,7 +82,6 @@ import jax.numpy as jnp
 from repro.configs import get_config, reduced, RunConfig, ShapeConfig
 from repro.core.transform import get_runner
 from repro.data import SyntheticLM
-from jax.sharding import AxisType
 
 cfg = reduced(get_config("phi3-medium-14b"), layers=1)
 shape = ShapeConfig("tiny", seq_len=16, global_batch=4, kind="train")
@@ -91,8 +91,8 @@ kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
 ds = SyntheticLM(cfg.vocab_size, 16, 4)
 ref = get_runner(cfg, shape, RunConfig(**kw))
 ref_out = [float(ref.run(ds.batch(i))["grad_norm"]) for i in range(2)]
-mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
-with jax.set_mesh(mesh):
+mesh = make_mesh((4, 2), ("data", "model"))
+with use_mesh(mesh):
     run = get_runner(cfg, shape, RunConfig(**kw), mesh=mesh)
     dist_out = [float(run.run(ds.batch(i))["grad_norm"]) for i in range(2)]
 print("RESULT:" + json.dumps({"ref": ref_out, "dist": dist_out}))

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from conftest import distributed_run
 from repro.configs import RunConfig, ShapeConfig, get_config, reduced
@@ -34,14 +34,14 @@ def test_xent_local_matches_reference(vocab, seed):
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.distributed
 def test_sharded_xent_matches_local():
     code = """
 import jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.core.xent import sharded_xent, _xent_local
 
 vocab = 61
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 logits = jax.random.normal(jax.random.key(0), (4, 8, 64), jnp.float32) * 4
 labels = jax.random.randint(jax.random.key(1), (4, 8), 0, vocab)
 local = _xent_local(logits, labels, model_axis="", vocab=vocab, shards=1)
@@ -49,13 +49,13 @@ local = _xent_local(logits, labels, model_axis="", vocab=vocab, shards=1)
 def f(lg, lb):
     return sharded_xent(lg, lb, mesh=mesh, model_axis="model",
                         batch_axes=("data",), vocab=vocab)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     got = jax.jit(f)(logits, labels)
 # also grads flow
 def loss(lg):
     return sharded_xent(lg, labels, mesh=mesh, model_axis="model",
                         batch_axes=("data",), vocab=vocab).mean()
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     g = jax.jit(jax.grad(loss))(logits)
 probs_ok = bool(jnp.all(jnp.isfinite(g)))
 print("RESULT:" + json.dumps({
@@ -70,6 +70,7 @@ print("RESULT:" + json.dumps({
     assert res["pad_grad_zero"] == 0.0   # padded vocab rows stay frozen
 
 
+@pytest.mark.distributed
 def test_planner_escalates_zero_stage_for_big_models():
     cfg = get_config("mistral-large-123b")
     code = """
@@ -77,9 +78,8 @@ from repro.configs import get_config, RunConfig, SHAPES
 from repro.core.runtime import Runtime
 from repro.core.transform import analyze
 from repro.models.model import build_model
-from jax.sharding import AxisType
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 rt = Runtime(get_config("mistral-large-123b"), RunConfig(),
              SHAPES["train_4k"], mesh=mesh)
 model = build_model(rt.model_cfg, rt)
@@ -97,6 +97,7 @@ print("RESULT:" + json.dumps({"big": plan.zero_stage,
     assert res["small"] == 0        # small model stays replicated
 
 
+@pytest.mark.distributed
 def test_pspec_divisibility_fallback():
     from repro.core.plan import MeshRules
     rules = MeshRules(None, {})
@@ -104,8 +105,7 @@ def test_pspec_divisibility_fallback():
 
     code = """
 from repro.core.plan import MeshRules, default_rules
-from jax.sharding import AxisType, PartitionSpec as P
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("data", "model"))
 rules = MeshRules(mesh, default_rules(mesh, "train", 8))
 ok1 = rules.pspec(("vocab", "embed"), (64, 16)) == P("model", None)
 ok2 = rules.pspec(("vocab", "embed"), (63, 16)) == P(None, None)  # 63 % 4 != 0

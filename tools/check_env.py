@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""One-line environment drift diagnosis.
+
+    PYTHONPATH=src python tools/check_env.py [--json]
+
+Prints the JAX version, device count, repro.compat capability probes, and
+optional-dependency presence, then a PASS/WARN verdict — so a broken
+environment shows up as one readable line instead of 16 cryptic test
+failures. tests/test_compat.py::test_check_env_smoke runs this on every
+suite invocation.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OPTIONAL_DEPS = ("hypothesis",)
+
+
+def collect() -> dict:
+    import jax
+    from repro import compat
+
+    report = {
+        "python": sys.version.split()[0],
+        "jax": compat.capabilities(),
+        "jaxlib": getattr(__import__("jaxlib"), "__version__", "?"),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "devices": [str(d) for d in jax.devices()[:8]],
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "optional_deps": {
+            name: importlib.util.find_spec(name) is not None
+            for name in OPTIONAL_DEPS
+        },
+    }
+    report["ok"] = bool(report["jax"]["supported"])
+    return report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable single-line report")
+    args = ap.parse_args()
+    report = collect()
+    if args.json:
+        print(json.dumps(report))
+        return 0 if report["ok"] else 1
+
+    from repro.compat import MIN_SUPPORTED
+    j = report["jax"]
+    print(f"python {report['python']}  jax {j['jax_version']}  "
+          f"jaxlib {report['jaxlib']}  backend={report['backend']}  "
+          f"devices={report['device_count']}")
+    print(f"compat: explicit_sharding={j['explicit_sharding']}  "
+          f"axis_types={j['axis_types']}  set_mesh={j['set_mesh']}  "
+          f"top_level_shard_map={j['top_level_shard_map']}  "
+          f"supported(>= {'.'.join(map(str, MIN_SUPPORTED))})"
+          f"={j['supported']}")
+    missing = [k for k, v in report["optional_deps"].items() if not v]
+    present = [k for k, v in report["optional_deps"].items() if v]
+    print("optional deps: "
+          + "  ".join([f"{k}=yes" for k in present]
+                      + [f"{k}=no (tests fall back to tests/_prop.py shim)"
+                         for k in missing]))
+    print("PASS" if report["ok"] else
+          "WARN: JAX older than the supported range — tier-1 results are "
+          "not meaningful")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
