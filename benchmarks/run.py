@@ -12,7 +12,7 @@ import sys
 
 def main() -> None:
     which = set(sys.argv[1:]) or {"table1", "table3", "table4", "fig13",
-                                  "roofline", "kernels"}
+                                  "roofline", "kernels", "adaptive"}
     if "table1" in which:
         from benchmarks import table1_census
         table1_census.main()
@@ -31,6 +31,9 @@ def main() -> None:
     if "kernels" in which:
         from benchmarks import kernel_bench
         kernel_bench.main()
+    if "adaptive" in which:
+        from benchmarks import adaptive_replan
+        adaptive_replan.main()
 
 
 if __name__ == "__main__":

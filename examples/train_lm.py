@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--zipf-a", type=float, default=1.3,
+                    help="token skew (natural-text-like embedding sparsity)")
+    ap.add_argument("--replan-every", type=int, default=0,
+                    help="profile->replan period in steps (0 = static plan)")
     args = ap.parse_args()
 
     L, d, h, kv, f, v = SIZES[args.size]
@@ -43,10 +47,14 @@ def main():
     print(f"model: {cfg.param_count()/1e6:.1f}M params")
     shape = ShapeConfig("train", args.seq, args.batch, "train")
     rc = RunConfig(attention_impl="chunked", attention_chunk=128,
-                   remat="none", learning_rate=1e-3)
-    ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
+                   remat="none", learning_rate=1e-3,
+                   capacity_mode="capped" if args.replan_every else "exact",
+                   capacity_factor=1.5)
+    ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch,
+                     zipf_a=args.zipf_a)
     tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-                         ckpt_every=100, log_every=20)
+                         ckpt_every=100, log_every=20,
+                         replan_every=args.replan_every)
     trainer = Trainer(cfg, shape, rc, tcfg, ds)
     if args.resume:
         trainer.maybe_restore()
@@ -57,13 +65,21 @@ def main():
     def on_metrics(step, m):
         losses.append(m.get("loss"))
         if step % 20 == 0:
+            extra = ""
+            if "observed_alpha" in m:
+                extra = (f"  alpha {m['observed_alpha']:.4f}"
+                         f"  replans {int(m.get('replans', 0))}")
             print(f"step {step:4d}  loss {m['loss']:.4f}  "
                   f"{m['tokens_per_s']:.0f} tok/s  "
-                  f"step_time {m['step_time_s']*1e3:.0f} ms")
+                  f"step_time {m['step_time_s']*1e3:.0f} ms{extra}")
 
     trainer.run(on_metrics=on_metrics)
     if trainer.ckpt:
         trainer.ckpt.wait()
+    if trainer.monitor.replans:
+        print(f"adaptive replans: {trainer.monitor.replans}  "
+              f"(plan alpha {trainer.plan.alpha:.4f}, "
+              f"capacity {trainer.plan.capacity})")
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
           f"checkpoints in {args.ckpt_dir}")
 

@@ -164,6 +164,10 @@ class RunConfig:
     # estimated fraction of vocab touched per replica-step (sparsity alpha);
     # None -> derived from shape (min(1, local_tokens / vocab)).
     sparsity_alpha: Optional[float] = None
+    # declared token skew for the *planner*: when set, the census estimates
+    # expected-unique under folded Zipf(zipf_a) instead of the uniform upper
+    # bound (core/sparsity.py::expected_unique_zipf). None = uniform bound.
+    zipf_a: Optional[float] = None
 
 
 def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,

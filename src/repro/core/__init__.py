@@ -1,9 +1,13 @@
 """Parallax core: the paper's contribution (hybrid communication, local
 aggregation, operation placement, automatic transformation) in JAX."""
 from repro.core.runtime import Runtime
-from repro.core.plan import Plan, ParamPlan, MeshRules, default_rules
+from repro.core.plan import Plan, ParamPlan, MeshRules, default_rules, plan_diff
 from repro.core.transform import (
-    analyze, get_runner, make_train_step, make_decode_step, make_prefill_step,
+    analyze, estimate_census, choose_methods, build_step, get_runner, Runner,
+    make_train_step, make_decode_step, make_prefill_step,
     state_shardings, batch_shardings, param_shardings,
+)
+from repro.core.sparsity import (
+    SparsityProfile, observed_census, expected_unique, expected_unique_zipf,
 )
 from repro.core import cost_model, sparsity, embedding, xent

@@ -67,6 +67,36 @@ class EmbedCtx:
         return n
 
 
+def _count_unique(ids_flat: jax.Array) -> jax.Array:
+    sorted_ids = jnp.sort(ids_flat)
+    return 1 + jnp.sum(sorted_ids[1:] != sorted_ids[:-1]).astype(jnp.int32)
+
+
+def _dedupe(ids_flat: jax.Array, capacity: int, vocab_padded: int,
+            local_agg: bool
+            ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """dedupe + observed census: also returns the true unique count
+    (pre-capacity) — the in-graph sparsity measurement the runtime profiler
+    consumes (core/sparsity.py::SparsityProfile)."""
+    t = ids_flat.shape[0]
+    if not local_agg:
+        # no dedupe: the activated row-buffer is the raw token count. The
+        # census reports the buffer actually exchanged — and the LA-off
+        # ablation path stays sort-free.
+        return (ids_flat.astype(jnp.int32),
+                jnp.arange(t, dtype=jnp.int32),
+                jnp.zeros((), jnp.int32),
+                jnp.asarray(t, jnp.int32))
+    capacity = min(capacity, t)
+    uids, inv = jnp.unique(
+        ids_flat, size=capacity, fill_value=vocab_padded, return_inverse=True)
+    n_unique = _count_unique(ids_flat)
+    dropped = jnp.maximum(n_unique - capacity, 0)
+    valid = uids[inv] == ids_flat
+    inv = jnp.where(valid, inv, capacity)
+    return uids.astype(jnp.int32), inv.astype(jnp.int32), dropped, n_unique
+
+
 def dedupe(ids_flat: jax.Array, capacity: int, vocab_padded: int,
            local_agg: bool) -> tuple[jax.Array, jax.Array, jax.Array]:
     """(unique_ids[capacity], inverse[T], n_dropped). Sentinel = vocab_padded.
@@ -74,20 +104,9 @@ def dedupe(ids_flat: jax.Array, capacity: int, vocab_padded: int,
     inverse entries that overflowed capacity point one-past-end (= capacity),
     which readers treat as a zero row.
     """
-    t = ids_flat.shape[0]
-    if not local_agg:
-        return (ids_flat.astype(jnp.int32),
-                jnp.arange(t, dtype=jnp.int32),
-                jnp.zeros((), jnp.int32))
-    capacity = min(capacity, t)
-    uids, inv = jnp.unique(
-        ids_flat, size=capacity, fill_value=vocab_padded, return_inverse=True)
-    sorted_ids = jnp.sort(ids_flat)
-    n_unique = 1 + jnp.sum(sorted_ids[1:] != sorted_ids[:-1]).astype(jnp.int32)
-    dropped = jnp.maximum(n_unique - capacity, 0)
-    valid = uids[inv] == ids_flat
-    inv = jnp.where(valid, inv, capacity)
-    return uids.astype(jnp.int32), inv.astype(jnp.int32), dropped
+    uids, inv, dropped, _ = _dedupe(ids_flat, capacity, vocab_padded,
+                                    local_agg)
+    return uids, inv, dropped
 
 
 # ---------------------------------------------------------------------------
@@ -95,11 +114,19 @@ def dedupe(ids_flat: jax.Array, capacity: int, vocab_padded: int,
 # ---------------------------------------------------------------------------
 
 def _fwd_local(table_shard, ids_loc, ctx: EmbedCtx, capacity: int):
-    """-> out (B_loc,S,E), uids (1,cap), inv (B_loc,S), dropped (scalar)."""
+    """-> out (B_loc,S,E), uids (1,cap), inv (B_loc,S), dropped, uniq."""
     b_loc, s = ids_loc.shape
     flat = ids_loc.reshape(-1).astype(jnp.int32)
-    uids, inv, dropped = dedupe(flat, capacity, ctx.vocab_padded,
-                                ctx.local_agg)
+    uids, inv, dropped, n_unique = _dedupe(flat, capacity, ctx.vocab_padded,
+                                           ctx.local_agg)
+    # observed census: mean unique ids per replica-step (scalar; cheap).
+    # Inside shard_map the count varies over the batch axes — average them
+    # (a scalar psum, OPAU-style); over the model axis ids are replicated.
+    uniq = n_unique.astype(jnp.float32)
+    in_shard_map = ctx.mesh is not None and \
+        ctx.method not in ("dense", "allreduce")
+    if in_shard_map and ctx.batch_axes:
+        uniq = jax.lax.psum(uniq, ctx.batch_axes) / ctx.replicas
     vs = table_shard.shape[0]
     if ctx.model_shards > 1:
         m = jax.lax.axis_index(ctx.model_axis)
@@ -114,7 +141,7 @@ def _fwd_local(table_shard, ids_loc, ctx: EmbedCtx, capacity: int):
         rows = jnp.where((uids < vs)[:, None], rows, 0)
     rows_pad = jnp.concatenate([rows, jnp.zeros_like(rows[:1])], axis=0)
     out = jnp.take(rows_pad, inv, axis=0).reshape(b_loc, s, -1)
-    return out, uids[None], inv.reshape(b_loc, s), dropped
+    return out, uids[None], inv.reshape(b_loc, s), dropped, uniq
 
 
 def _bwd_local(uids_row, inv_loc, d_out_loc, vs_shard, ctx: EmbedCtx):
@@ -178,14 +205,14 @@ def _bwd_local(uids_row, inv_loc, d_out_loc, vs_shard, ctx: EmbedCtx):
 
 @partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def _lookup(table, ids, ctx: EmbedCtx, capacity: int):
-    out, _, _, dropped = _lookup_fwd_impl(table, ids, ctx, capacity)
-    return out, dropped
+    out, _, _, dropped, uniq = _lookup_fwd_impl(table, ids, ctx, capacity)
+    return out, dropped, uniq
 
 
 def _lookup_fwd_impl(table, ids, ctx: EmbedCtx, capacity: int):
     if ctx.mesh is None or ctx.method in ("dense", "allreduce"):
-        out, uids, inv, dropped = _fwd_local(table, ids, ctx, capacity)
-        return out, uids, inv, dropped
+        out, uids, inv, dropped, uniq = _fwd_local(table, ids, ctx, capacity)
+        return out, uids, inv, dropped, uniq
     ba = ctx.batch_axes or None
     table_spec = P(None, None) if ctx.method == "mpi_gatherv" \
         else P(ctx.model_axis, None)
@@ -193,19 +220,20 @@ def _lookup_fwd_impl(table, ids, ctx: EmbedCtx, capacity: int):
         lambda t, i: _fwd_local(t, i, ctx, capacity),
         mesh=ctx.mesh,
         in_specs=(table_spec, P(ba, None)),
-        out_specs=(P(ba, None, None), P(ba, None), P(ba, None), P()),
+        out_specs=(P(ba, None, None), P(ba, None), P(ba, None), P(), P()),
         check_vma=False,
     )
     return fn(table, ids)
 
 
 def _lookup_fwd(table, ids, ctx: EmbedCtx, capacity: int):
-    out, uids, inv, dropped = _lookup_fwd_impl(table, ids, ctx, capacity)
-    return (out, dropped), (uids, inv, jnp.zeros((0,), table.dtype))
+    out, uids, inv, dropped, uniq = _lookup_fwd_impl(table, ids, ctx,
+                                                     capacity)
+    return (out, dropped, uniq), (uids, inv, jnp.zeros((0,), table.dtype))
 
 
 def _lookup_bwd(ctx: EmbedCtx, capacity: int, res, cts):
-    d_out, _ = cts
+    d_out, _, _ = cts
     uids, inv, dtype_probe = res
     vocab_rows = ctx.vocab_padded
     vs = vocab_rows // ctx.model_shards
@@ -246,8 +274,9 @@ def lookup(table: jax.Array, ids: jax.Array, *, ctx: EmbedCtx,
         capacity = min(local_tokens, ctx.vocab_padded)
     else:
         capacity = min(capacity, local_tokens, ctx.vocab_padded)
-    out, dropped = _lookup(table, ids, ctx, capacity)
+    out, dropped, uniq = _lookup(table, ids, ctx, capacity)
     nrows = capacity if ctx.local_agg else local_tokens
     metrics = {"embed_rows": jnp.asarray(nrows, jnp.int32),
-               "embed_dropped": jax.lax.stop_gradient(dropped)}
+               "embed_dropped": jax.lax.stop_gradient(dropped),
+               "embed_unique": jax.lax.stop_gradient(uniq)}
     return out.astype(table.dtype), metrics

@@ -173,6 +173,42 @@ class Plan:
         return out
 
 
+def plan_diff(old: Plan, new: Plan, capacity_drift: float = 1.5) -> dict:
+    """Structural diff between two Plans for the replan loop.
+
+    ``changed`` is True when any parameter's exchange method flips, any
+    pspec/opt_pspec differs (state must reshard), or the sparse-exchange
+    capacity drifts by more than ``capacity_drift``x in either direction.
+    """
+    leaf = lambda x: isinstance(x, ParamPlan)
+    olds = {p.name: p for p in jax.tree.leaves(old.params, is_leaf=leaf)}
+    flips, pspecs_changed = [], False
+    for p in jax.tree.leaves(new.params, is_leaf=leaf):
+        q = olds.get(p.name)
+        if q is None:
+            pspecs_changed = True
+            continue
+        if p.method != q.method:
+            flips.append((p.name, q.method, p.method))
+        if tuple(p.pspec) != tuple(q.pspec) or \
+                tuple(p.opt_pspec) != tuple(q.opt_pspec):
+            pspecs_changed = True
+    hi = max(old.capacity, new.capacity)
+    lo = max(min(old.capacity, new.capacity), 1)
+    capacity_drifted = old.capacity != new.capacity and \
+        hi / lo >= capacity_drift
+    return {
+        "changed": bool(flips) or pspecs_changed or capacity_drifted,
+        "rebuilt": False,             # set by the caller that acts on the diff
+        "flips": flips,
+        "pspecs_changed": pspecs_changed,
+        "capacity_drifted": capacity_drifted,
+        "capacity": (old.capacity, new.capacity),
+        "alpha": (old.alpha, new.alpha),
+        "embed_method": (old.embed_method, new.embed_method),
+    }
+
+
 def _fsdp_axes(mesh: Mesh, dense_strategy: str = "tp") -> tuple:
     axes = ("data", "model") if dense_strategy == "dp" else ("data",)
     return tuple(a for a in axes if a in mesh.axis_names)

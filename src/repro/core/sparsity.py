@@ -12,14 +12,22 @@ analogue of the auto-diff tap), and α is *estimated* from the workload:
 with the expected-unique count under a uniform-draw upper bound
 ``V·(1 - (1-1/V)^T)`` (exact for uniform ids; an upper bound on duplicates
 for any distribution, i.e. a conservative capacity).
+
+Planning-time estimates are only the opening bid: the paper profiles actual
+sparsity during early iterations and re-optimizes the transfer plan. The
+runtime half of that loop lives here too — ``SparsityProfile`` maintains a
+host-side EMA of the in-graph unique-row counts the embedding exchange emits
+every step (``*_unique`` metrics), and ``observed_census`` folds the profile
+back into a ``Census`` the planner can re-run on (transform.analyze(census=)).
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Any
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional
 
 import jax
+import numpy as np
 
 from repro.models.layers import ParamSpec
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
@@ -30,6 +38,38 @@ def expected_unique(tokens: int, vocab: int) -> float:
     if tokens <= 0 or vocab <= 0:
         return 0.0
     return vocab * (1.0 - math.exp(tokens * math.log1p(-1.0 / vocab)))
+
+
+def zipf_row_probs(vocab: int, a: float, folds: int = 8) -> np.ndarray:
+    """P(id == i) when ids are drawn as ``(zipf(a) - 1) % vocab`` (the
+    synthetic-corpus scheme in data/pipeline.py).
+
+    Unbounded Zipf ranks fold onto [0, vocab); the first ``folds`` wraps are
+    summed exactly and the remaining tail mass (which varies slowly over any
+    vocab-sized window at large rank) is spread uniformly.
+    """
+    if a <= 1.0:
+        raise ValueError("zipf exponent must be > 1")
+    n = vocab * folds
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    w = ranks ** -a
+    # zeta(a) ~ partial sum + Euler-Maclaurin tail of the unbounded series
+    tail = n ** (1.0 - a) / (a - 1.0) + 0.5 * n ** -a
+    z = w.sum() + tail
+    p = w.reshape(folds, vocab).sum(axis=0) / z
+    return p + (tail / z) / vocab
+
+
+def expected_unique_zipf(tokens: int, vocab: int, a: float = 1.3) -> float:
+    """E[#unique] for `tokens` draws from the folded-Zipf(a) id distribution.
+
+    E[U] = sum_i 1 - (1 - p_i)^T — the skew-aware counterpart of
+    ``expected_unique`` (which systematically over-estimates for Zipf ids).
+    """
+    if tokens <= 0 or vocab <= 0:
+        return 0.0
+    p = np.minimum(zipf_row_probs(vocab, a), 1.0 - 1e-12)
+    return float(np.sum(-np.expm1(tokens * np.log1p(-p))))
 
 
 @dataclass
@@ -61,7 +101,10 @@ def run_census(specs: Any, model_cfg: ModelConfig, shape_cfg: ShapeConfig,
         alpha = run_cfg.sparsity_alpha
         uniq = alpha * vocab
     else:
-        uniq = expected_unique(local_tokens, vocab)
+        if run_cfg.zipf_a is not None and vocab:
+            uniq = expected_unique_zipf(local_tokens, vocab, run_cfg.zipf_a)
+        else:
+            uniq = expected_unique(local_tokens, vocab)
         alpha = uniq / vocab if vocab else 0.0
     if run_cfg.capacity_mode == "exact":
         capacity = min(local_tokens, vocab)
@@ -69,3 +112,71 @@ def run_census(specs: Any, model_cfg: ModelConfig, shape_cfg: ShapeConfig,
         capacity = min(int(math.ceil(uniq * run_cfg.capacity_factor)), local_tokens, vocab)
     capacity = max(capacity, 8)
     return Census(dense, sparse, alpha, local_tokens, capacity)
+
+
+# ---------------------------------------------------------------------------
+# runtime profile: observed sparsity (the paper's early-iteration profiling)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SparsityProfile:
+    """Host-side EMA of in-graph unique-row counts per sparse parameter.
+
+    The jitted step emits ``*_unique`` scalar metrics (mean unique ids per
+    replica-step, from core/embedding.py's dedupe census); ``update`` folds
+    each host-materialized metrics dict into an EMA. ``observed_census``
+    turns the profile into a Census the planner re-runs on.
+    """
+    decay: float = 0.9
+    ema: dict = field(default_factory=dict)     # metric name -> EMA count
+    last: dict = field(default_factory=dict)    # metric name -> last count
+    steps: int = 0                              # steps with census data
+
+    def update(self, metrics: dict) -> None:
+        seen = False
+        for k, v in metrics.items():
+            if not k.endswith("_unique"):
+                continue
+            try:
+                v = float(v)
+            except (TypeError, ValueError):
+                continue
+            seen = True
+            self.last[k] = v
+            prev = self.ema.get(k)
+            self.ema[k] = v if prev is None else \
+                self.decay * prev + (1.0 - self.decay) * v
+        if seen:
+            self.steps += 1
+
+    def ready(self, min_steps: int = 1) -> bool:
+        return bool(self.ema) and self.steps >= min_steps
+
+    @property
+    def observed_unique(self) -> float:
+        """Per-replica unique rows per step (max over sparse params — the
+        capacity-binding table)."""
+        return max(self.ema.values(), default=0.0)
+
+    def alpha(self, vocab: int) -> float:
+        return self.observed_unique / vocab if vocab else 0.0
+
+
+def observed_census(profile: SparsityProfile, base: Census,
+                    vocab: int, run_cfg: RunConfig) -> Census:
+    """Fold a runtime profile into a planning Census.
+
+    α and capacity follow the measured EMA; totals and local_tokens stay
+    structural (they don't drift at runtime).
+    """
+    if not profile.ema or vocab <= 0:
+        return base
+    uniq = min(profile.observed_unique, vocab, base.local_tokens)
+    alpha = uniq / vocab
+    if run_cfg.capacity_mode == "exact":
+        capacity = base.capacity      # exact mode sizes buffers per call-site
+    else:
+        capacity = min(int(math.ceil(uniq * run_cfg.capacity_factor)),
+                       base.local_tokens, vocab)
+    capacity = max(capacity, 8)
+    return replace(base, alpha=alpha, capacity=capacity)

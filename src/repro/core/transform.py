@@ -1,16 +1,26 @@
 """Automatic graph transformation (paper §5) — the Parallax API.
 
-``analyze``   runs the sparsity census + Table-3 cost model and produces a
-              Plan: per-parameter exchange method, shardings (incl. ZeRO
-              escalation under the per-chip memory budget), sparse-exchange
-              capacities.
+Planning is a pipeline of pure stages so it can be re-entered at runtime
+with *observed* (not estimated) workload parameters:
+
+``estimate_census``  workload-model census (uniform/Zipf analytic α).
+``choose_methods``   census -> Plan via the Table-3 cost model (incl. ZeRO
+                     escalation under the per-chip memory budget).
+``analyze``          the one-shot composition of the two (census optional —
+                     pass an observed census to replan without rebuilding
+                     the model).
+``build_step``       the shared state/sharding/jit assembly used by both
+                     ``get_runner`` and ``runtime.trainer.Trainer``.
 ``make_train_step`` / ``make_decode_step``
               build the distributed jit-ready step functions with
               in/out shardings derived from the plan. The correctness
               contract (paper §3.1): the distributed step computes exactly
               what the single-device step computes at equal global batch —
               asserted by tests/test_transform.py.
-``get_runner`` the user-facing two-line API (paper Table 2 analogue).
+``get_runner`` the user-facing two-line API (paper Table 2 analogue);
+              ``Runner.replan(census)`` hot-swaps the jitted step onto a
+              plan recomputed from a measured census (paper §5's profile →
+              re-optimize loop).
 """
 from __future__ import annotations
 
@@ -20,13 +30,15 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import compat
 from repro.compat import Mesh, NamedSharding, P
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core import cost_model, sparsity
 from repro.core.plan import (MeshRules, ParamPlan, Plan, add_fsdp,
-                             default_rules, per_device_bytes, _pspec_shards)
+                             default_rules, per_device_bytes, plan_diff,
+                             _pspec_shards)
 from repro.core.runtime import Runtime
 from repro.models.layers import ParamSpec
 from repro.models.model import Model, build_model
@@ -47,13 +59,31 @@ def _mesh_dims(mesh: Optional[Mesh], rules: MeshRules) -> cost_model.MeshDims:
     )
 
 
+def estimate_census(model: Model, rt: Runtime) -> sparsity.Census:
+    """Stage 1: the build-time workload-model census (estimated α)."""
+    dims = _mesh_dims(rt.mesh, rt.rules)
+    return sparsity.run_census(model.specs(), rt.model_cfg, rt.shape_cfg,
+                               rt.run_cfg, dims.replicas)
+
+
 def analyze(model: Model, rt: Runtime,
-            memory_budget: float = 0.9 * HW.hbm_bytes) -> Plan:
-    """Sparsity census + cost model -> Plan (the paper's analysis phase)."""
+            memory_budget: float = 0.9 * HW.hbm_bytes,
+            census: Optional[sparsity.Census] = None) -> Plan:
+    """Census + cost model -> Plan (the paper's analysis phase).
+
+    Pass ``census`` (e.g. an observed one from a SparsityProfile) to replan
+    from measured sparsity; by default the workload-model estimate is used.
+    """
+    if census is None:
+        census = estimate_census(model, rt)
+    return choose_methods(model, rt, census, memory_budget)
+
+
+def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
+                   memory_budget: float = 0.9 * HW.hbm_bytes) -> Plan:
+    """Stage 2: pure census -> Plan (Table-3 argmin + memory escalation)."""
     specs = model.specs()
     dims = _mesh_dims(rt.mesh, rt.rules)
-    census = sparsity.run_census(specs, rt.model_cfg, rt.shape_cfg,
-                                 rt.run_cfg, dims.replicas)
     comm_mode = rt.run_cfg.comm_mode
     embed_method = "dense"
 
@@ -218,6 +248,63 @@ def make_prefill_step(model: Model, rt: Runtime, plan: Plan) -> Callable:
 
 
 # ---------------------------------------------------------------------------
+# step assembly (shared by get_runner / Trainer._build / replan)
+# ---------------------------------------------------------------------------
+
+def build_step(model: Model, optimizer: Optimizer, rt: Runtime, plan: Plan,
+               state: Optional[TrainState] = None, *, seed: int = 0
+               ) -> tuple[Callable, TrainState, Any]:
+    """Assemble (jitted train step, state, shardings) for a plan.
+
+    ``state=None``: fresh init from ``seed``. An existing ``state`` (device
+    or host arrays — e.g. the elastic remesh/replan paths) is the sharding
+    template itself (no throwaway init) and is device_put onto the plan's
+    shardings — a no-op when the placement is already current, a reshard
+    otherwise.
+    """
+    step_fn = make_train_step(model, optimizer, rt, plan)
+    if state is None:
+        state = optimizer.init(model.init(jax.random.key(seed)))
+    state_like = state
+    if plan.mesh is not None:
+        # every sharding below names the mesh explicitly, so the pjit path
+        # needs no ambient mesh; on explicit-sharding JAX use_mesh gives
+        # callers who didn't wrap the builder the set_mesh placement
+        # semantics, and on older JAX it is a no-op context.
+        with compat.use_mesh(plan.mesh):
+            shardings = state_shardings(plan, state_like)
+            state = jax.device_put(state, shardings)
+            bs = batch_shardings(plan, model.input_specs())
+            step = jax.jit(step_fn, in_shardings=(shardings, bs),
+                           out_shardings=(shardings, None), donate_argnums=0)
+    else:
+        shardings = None
+        step = jax.jit(step_fn, donate_argnums=0)
+    return step, state, shardings
+
+
+def apply_replan(model: Model, optimizer: Optimizer, rt: Runtime,
+                 new_plan: Plan, state: TrainState, diff: dict
+                 ) -> tuple[Callable, TrainState, Any]:
+    """Hot-swap to ``new_plan``: rebuild the jitted step, reshard state.
+
+    The one shared swap sequence under Runner.replan and
+    Trainer.maybe_replan: state moves device-to-device when pspecs are
+    unchanged and through a host round-trip when they moved (the
+    version-portable elastic path). Marks ``diff['rebuilt']``.
+    """
+    rt.plan = new_plan            # model fns read the plan at trace time
+    if diff["pspecs_changed"] and new_plan.mesh is not None:
+        state = jax.tree.map(
+            lambda a: None if a is None else np.asarray(jax.device_get(a)),
+            state)
+    step, state, shardings = build_step(model, optimizer, rt, new_plan,
+                                        state)
+    diff["rebuilt"] = True
+    return step, state, shardings
+
+
+# ---------------------------------------------------------------------------
 # the two-line user API (paper Table 2)
 # ---------------------------------------------------------------------------
 
@@ -229,10 +316,31 @@ class Runner:
     rt: Runtime
     train_step: Callable          # jitted
     state: TrainState
+    shardings: Any = None         # TrainState of NamedShardings (None off-mesh)
 
     def run(self, batch) -> dict:
         self.state, metrics = self.train_step(self.state, batch)
         return metrics
+
+    def replan(self, census: sparsity.Census, *, force: bool = False,
+               capacity_drift: float = 1.5) -> dict:
+        """Hot-swap the plan/step from a (typically observed) census.
+
+        Recomputes the Plan through the same pure stages as build time. If
+        nothing material changed (no method flip, no pspec change, capacity
+        within ``capacity_drift``x) the live step is kept untouched unless
+        ``force``. State reshards in place: device-to-device when only the
+        jitted step changes, through a host round-trip when pspecs moved
+        (the version-portable elastic path). Returns the plan diff.
+        """
+        new_plan = analyze(self.model, self.rt, census=census)
+        diff = plan_diff(self.plan, new_plan, capacity_drift)
+        if not (diff["changed"] or force):
+            return diff
+        self.plan = new_plan
+        self.train_step, self.state, self.shardings = apply_replan(
+            self.model, self.optimizer, self.rt, new_plan, self.state, diff)
+        return diff
 
 
 def get_runner(model_cfg: ModelConfig, shape_cfg: ShapeConfig,
@@ -244,22 +352,6 @@ def get_runner(model_cfg: ModelConfig, shape_cfg: ShapeConfig,
     plan = analyze(model, rt)
     rt.plan = plan
     optimizer = make_optimizer(rt)
-    step = make_train_step(model, optimizer, rt, plan)
-
-    params = model.init(jax.random.key(seed))
-    state = optimizer.init(params)
-    if mesh is not None:
-        # every sharding below names the mesh explicitly, so the pjit path
-        # needs no ambient mesh; on explicit-sharding JAX use_mesh gives
-        # callers who didn't wrap get_runner the set_mesh placement
-        # semantics, and on older JAX it is a no-op context.
-        with compat.use_mesh(mesh):
-            shardings = state_shardings(plan, state)
-            state = jax.device_put(state, shardings)
-            bs = batch_shardings(plan, model.input_specs())
-            step = jax.jit(step, in_shardings=(shardings, bs),
-                           out_shardings=(shardings, None), donate_argnums=0)
-    else:
-        step = jax.jit(step, donate_argnums=0)
+    step, state, shardings = build_step(model, optimizer, rt, plan, seed=seed)
     return Runner(model=model, optimizer=optimizer, plan=plan, rt=rt,
-                  train_step=step, state=state)
+                  train_step=step, state=state, shardings=shardings)

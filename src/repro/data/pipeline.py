@@ -67,6 +67,13 @@ class Dataset:
             out = {k: v[sl] for k, v in out.items()}
         return out
 
+    def unique_counts(self, steps: int = 8, start: int = 0) -> list:
+        """Empirical unique token ids per (per-replica) batch — the ground
+        truth the census estimators and the runtime profiler are pinned
+        against (tests/test_replan.py)."""
+        return [int(np.unique(self.batch(s)["tokens"]).size)
+                for s in range(start, start + steps)]
+
     def __iter__(self) -> Iterator[dict]:
         step = 0
         while True:

@@ -27,6 +27,20 @@ def _parse():
     ap.add_argument("--no-local-agg", action="store_true")
     ap.add_argument("--no-opau", action="store_true")
     ap.add_argument("--no-opsw", action="store_true")
+    ap.add_argument("--capacity-mode", default="exact",
+                    choices=("exact", "capped"))
+    ap.add_argument("--capacity-factor", type=float, default=1.0)
+    ap.add_argument("--zipf-a", type=float, default=1.3,
+                    help="skew of the synthetic token distribution")
+    ap.add_argument("--plan-zipf", action="store_true",
+                    help="let the planner assume the declared --zipf-a skew "
+                         "(default: conservative uniform-draw bound)")
+    ap.add_argument("--replan-every", type=int, default=0,
+                    help="profile->replan period in steps (0 = static plan)")
+    ap.add_argument("--replan-warmup", type=int, default=2)
+    ap.add_argument("--replan-drift", type=float, default=1.5,
+                    help="capacity drift factor that triggers a replan")
+    ap.add_argument("--profile-decay", type=float, default=0.9)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -66,6 +80,9 @@ def main():
     run_cfg = RunConfig(
         comm_mode=args.comm_mode, local_agg=not args.no_local_agg,
         opau=not args.no_opau, opsw=not args.no_opsw,
+        capacity_mode=args.capacity_mode,
+        capacity_factor=args.capacity_factor,
+        zipf_a=args.zipf_a if args.plan_zipf else None,
         learning_rate=args.lr, remat=args.remat,
         attention_impl=args.attention, seed=args.seed)
     mesh = None
@@ -75,12 +92,16 @@ def main():
             ("pod", "data", "model")
         mesh = make_mesh(dims, axes)
     ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed,
-                     is_encdec=cfg.is_encdec,
+                     zipf_a=args.zipf_a, is_encdec=cfg.is_encdec,
                      frames_dim=cfg.d_model if cfg.family == "audio" else 0,
                      frames_len=max(args.seq // 4, 1))
     tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                          ckpt_every=args.ckpt_every,
-                         log_every=args.log_every)
+                         log_every=args.log_every,
+                         replan_every=args.replan_every,
+                         replan_warmup=args.replan_warmup,
+                         replan_drift=args.replan_drift,
+                         profile_decay=args.profile_decay)
     trainer = Trainer(cfg, shape, run_cfg, tcfg, ds, mesh=mesh)
     trainer.maybe_restore()
 
@@ -89,9 +110,13 @@ def main():
 
     def on_metrics(step, m):
         if step % args.log_every == 0:
+            extra = ""
+            if "observed_alpha" in m:
+                extra = (f"  alpha {m['observed_alpha']:.4f}"
+                         f"  replans {int(m.get('replans', 0))}")
             print(f"step {step:5d}  loss {m.get('loss', float('nan')):.4f}  "
                   f"{m.get('tokens_per_s', 0):.0f} tok/s  "
-                  f"gnorm {m.get('grad_norm', float('nan')):.3f}")
+                  f"gnorm {m.get('grad_norm', float('nan')):.3f}{extra}")
 
     trainer.run(on_metrics=on_metrics)
     dt = time.time() - t0

@@ -93,7 +93,10 @@ def forward(params, batch, *, cfg, rt, state=None):
                              ctx=ctx, capacity=rt.embed_capacity)
         enc_out, _ = _run_stack(params["enc_layers"], src.astype(rt.dtype),
                                 _init_state(cfg, b, cfg.enc_layers), rt)
-        metrics = {k: metrics[k] + m2[k] for k in metrics}
+        # counts add across tables; the unique census keeps the binding
+        # (largest) table — capacity is provisioned per table, not summed
+        metrics = {k: (jnp.maximum(metrics[k], m2[k]) if k.endswith("_unique")
+                       else metrics[k] + m2[k]) for k in metrics}
     x, new_state = _run_stack(params["layers"], x, state, rt)
     if cfg.is_encdec:
         # GNMT-lite dot attention over encoder states

@@ -5,12 +5,17 @@ In synchronous data-parallel training a straggling host slows every step
 stragglers manifest as step-time outliers; the monitor flags sustained
 regressions so the driver loop can act (checkpoint + re-mesh without the
 slow host = the elastic restart path in trainer.py).
+
+The monitor also carries the adaptive-replanning telemetry: the trainer
+reports the observed sparsity α (from the SparsityProfile EMA) and every
+plan hot-swap, and both show up in the per-step stats dict.
 """
 from __future__ import annotations
 
 import collections
 import time
 from dataclasses import dataclass, field
+from typing import Optional
 
 
 @dataclass
@@ -23,9 +28,17 @@ class StepMonitor:
     _outlier_run: int = 0
     total_steps: int = 0
     total_tokens: int = 0
+    observed_alpha: Optional[float] = None   # latest measured sparse α
+    replans: int = 0                         # plan hot-swaps so far
 
     def start(self):
         self._last = time.perf_counter()
+
+    def note_alpha(self, alpha: float):
+        self.observed_alpha = float(alpha)
+
+    def note_replan(self):
+        self.replans += 1
 
     def stop(self, tokens: int = 0) -> dict:
         dt = time.perf_counter() - self._last
@@ -37,12 +50,16 @@ class StepMonitor:
         med = self.median()
         is_outlier = len(self.times) >= 10 and dt > self.straggler_factor * med
         self._outlier_run = self._outlier_run + 1 if is_outlier else 0
-        return {
+        stats = {
             "step_time_s": dt,
             "median_s": med,
             "tokens_per_s": tokens / dt if dt > 0 else 0.0,
             "straggler_suspected": self.straggler_suspected,
+            "replans": self.replans,
         }
+        if self.observed_alpha is not None:
+            stats["observed_alpha"] = self.observed_alpha
+        return stats
 
     def median(self) -> float:
         if not self.times:

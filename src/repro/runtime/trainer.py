@@ -10,6 +10,14 @@ Responsibilities beyond the jitted step:
     a different mesh and reshards the live state through the elastic
     checkpoint path (the node-failure story: drop the bad host's slice,
     re-mesh, resume);
+  * adaptive replanning — with ``replan_every > 0`` the driver feeds the
+    in-graph sparsity census (``embed_unique`` metrics) into a
+    ``SparsityProfile`` EMA and periodically re-runs the planner on the
+    *observed* census (paper §5's profile → re-optimize loop). When the
+    cost model flips a method or the capacity drifts past
+    ``replan_drift``x, the jitted step is rebuilt and the live state
+    reshards in place — device-side when pspecs are unchanged, through the
+    remesh host path otherwise;
   * straggler detection via runtime/monitor.py.
 """
 from __future__ import annotations
@@ -27,9 +35,11 @@ from repro import compat
 from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step,
                                    restore_checkpoint)
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core.plan import plan_diff
 from repro.core.runtime import Runtime
-from repro.core.transform import (analyze, batch_shardings, make_train_step,
-                                  state_shardings)
+from repro.core.sparsity import SparsityProfile, observed_census
+from repro.core.transform import (analyze, apply_replan, build_step,
+                                  estimate_census)
 from repro.data.pipeline import Dataset
 from repro.models.model import build_model
 from repro.optim.optimizer import make_optimizer
@@ -47,6 +57,11 @@ class TrainerConfig:
     max_retries: int = 3
     log_every: int = 10
     metrics_host_every: int = 1
+    # ---- profile -> replan loop (0 disables) ----
+    replan_every: int = 0          # consider replanning every N steps
+    replan_warmup: int = 2         # min profiled steps before first replan
+    replan_drift: float = 1.5      # capacity drift factor that triggers it
+    profile_decay: float = 0.9     # EMA decay of the sparsity profile
 
 
 class Trainer:
@@ -60,11 +75,14 @@ class Trainer:
         self.ckpt = AsyncCheckpointer(tcfg.ckpt_dir, tcfg.keep_ckpts) \
             if tcfg.ckpt_dir else None
         self.step = 0
+        self.profile = SparsityProfile(decay=tcfg.profile_decay)
         log.debug("jax %s compat=%s", jax.__version__, compat.capabilities())
         self._build(mesh)
 
     # ------------------------------------------------------------------
     def _build(self, mesh, state=None):
+        """(Re)build plan + jitted step; ``state`` (host or device arrays)
+        is resharded onto the new plan instead of re-initializing."""
         self.mesh = mesh
         self.rt = Runtime(self.model_cfg, self.run_cfg, self.shape_cfg,
                           mesh=mesh)
@@ -72,23 +90,9 @@ class Trainer:
         self.plan = analyze(self.model, self.rt)
         self.rt.plan = self.plan
         self.optimizer = make_optimizer(self.rt)
-        step_fn = make_train_step(self.model, self.optimizer, self.rt,
-                                  self.plan)
-        if state is None:
-            params = self.model.init(jax.random.key(self.run_cfg.seed))
-            state = self.optimizer.init(params)
-        if mesh is not None:
-            with compat.use_mesh(mesh):
-                self.shardings = state_shardings(self.plan, state)
-                state = jax.device_put(state, self.shardings)
-                bs = batch_shardings(self.plan, self.model.input_specs())
-                self.train_step = jax.jit(
-                    step_fn, in_shardings=(self.shardings, bs),
-                    out_shardings=(self.shardings, None), donate_argnums=0)
-        else:
-            self.shardings = None
-            self.train_step = jax.jit(step_fn, donate_argnums=0)
-        self.state = state
+        self.train_step, self.state, self.shardings = build_step(
+            self.model, self.optimizer, self.rt, self.plan, state,
+            seed=self.run_cfg.seed)
 
     # ------------------------------------------------------------------
     def maybe_restore(self):
@@ -103,18 +107,42 @@ class Trainer:
 
     def remesh(self, new_mesh):
         """Elastic re-mesh: reshard live state onto a new mesh (e.g. after
-        dropping a failed host slice)."""
+        dropping a failed host slice). The rebuild derives shardings from
+        the restored values themselves — no throwaway ``model.init``."""
         host_state = jax.tree.map(
             lambda a: None if a is None else np.asarray(jax.device_get(a)),
             self.state)
-        self._build(new_mesh, state=None)
-        # reshard the old values onto the new mesh
-        def put(old, new_sh):
-            return jax.device_put(old, new_sh) if old is not None else None
-        if self.shardings is not None:
-            self.state = jax.tree.map(put, host_state, self.shardings)
-        else:
-            self.state = jax.device_put(host_state)
+        self._build(new_mesh, state=host_state)
+
+    # ------------------------------------------------------------------
+    def maybe_replan(self) -> Optional[dict]:
+        """Re-run the planner on the observed census; hot-swap on change.
+
+        Returns the plan diff when a replan was evaluated, None when the
+        profile has no data yet. Reuses the remesh reshard path only when
+        pspecs actually moved; otherwise state stays put and just the
+        jitted step is rebuilt against the new plan.
+        """
+        if not self.profile.ready(self.tcfg.replan_warmup):
+            return None
+        base = estimate_census(self.model, self.rt)
+        census = observed_census(self.profile, base,
+                                 self.model_cfg.vocab_size, self.run_cfg)
+        new_plan = analyze(self.model, self.rt, census=census)
+        diff = plan_diff(self.plan, new_plan, self.tcfg.replan_drift)
+        self.monitor.note_alpha(census.alpha)
+        if not diff["changed"]:
+            return diff
+        log.info(
+            "replan at step %d: alpha %.4f -> %.4f, capacity %d -> %d, "
+            "flips=%s, pspecs_changed=%s", self.step, diff["alpha"][0],
+            diff["alpha"][1], diff["capacity"][0], diff["capacity"][1],
+            diff["flips"], diff["pspecs_changed"])
+        self.plan = new_plan
+        self.train_step, self.state, self.shardings = apply_replan(
+            self.model, self.optimizer, self.rt, new_plan, self.state, diff)
+        self.monitor.note_replan()
+        return diff
 
     # ------------------------------------------------------------------
     def run(self, on_metrics: Optional[Callable[[int, dict], None]] = None):
@@ -128,6 +156,7 @@ class Trainer:
                 if (self.step + 1) % self.tcfg.metrics_host_every == 0:
                     metrics = {k: float(v) for k, v in metrics.items()
                                if getattr(v, "ndim", 0) == 0}
+                    self.profile.update(metrics)
                 retries = 0
             except Exception as e:  # failure path: restore + retry
                 retries += 1
@@ -140,6 +169,13 @@ class Trainer:
                 continue
             stats = self.monitor.stop(tokens=tokens_per_step)
             self.step += 1
+            if self.tcfg.replan_every and \
+                    self.step % self.tcfg.replan_every == 0:
+                self.maybe_replan()
+                # this step's stats must reflect a replan it triggered
+                stats["replans"] = self.monitor.replans
+                if self.monitor.observed_alpha is not None:
+                    stats["observed_alpha"] = self.monitor.observed_alpha
             if self.ckpt is not None and self.step % self.tcfg.ckpt_every == 0:
                 self.ckpt.save(self.step, self.state,
                                extra={"dataset_step": self.step})

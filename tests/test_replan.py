@@ -1,0 +1,296 @@
+"""The profile -> replan -> hot-swap loop (paper §5's runtime profiling).
+
+Covers: the Zipf-aware census estimator pinned against the empirical data
+pipeline; planning as pure stages (a plan recomputed from a census equals a
+from-scratch plan given the same census); state round-trips across no-op and
+method-flipping replans; the trainer's replan hook; and the abstract-init
+remesh path.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conftest import distributed_run
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.core import sparsity
+from repro.core.plan import plan_diff
+from repro.core.sparsity import (SparsityProfile, expected_unique,
+                                 expected_unique_zipf, observed_census)
+from repro.core.transform import (analyze, choose_methods, estimate_census,
+                                  get_runner)
+from repro.data import SyntheticLM
+
+
+# ---------------------------------------------------------------------------
+# census estimators vs the actual data pipeline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vocab,tokens", [(256, 64), (1024, 128),
+                                          (8192, 2048)])
+def test_zipf_estimator_matches_pipeline_uniform_does_not(vocab, tokens):
+    """expected_unique_zipf must track the empirical unique counts of the
+    Zipf(1.3) pipeline; the uniform bound must systematically over-estimate
+    (the planned-α error that motivates runtime replanning)."""
+    seq = 16
+    batch = max(tokens // seq, 1)
+    ds = SyntheticLM(vocab, seq, batch, seed=0)
+    emp = float(np.mean(ds.unique_counts(steps=16)))
+    zipf_est = expected_unique_zipf(tokens, vocab, ds.zipf_a)
+    uniform_est = expected_unique(tokens, vocab)
+    assert abs(zipf_est - emp) / emp < 0.15, (emp, zipf_est)
+    assert uniform_est > 1.5 * emp, (emp, uniform_est)
+    assert uniform_est > zipf_est
+
+
+def test_expected_unique_zipf_edges():
+    assert expected_unique_zipf(0, 100) == 0.0
+    assert expected_unique_zipf(100, 0) == 0.0
+    # more tokens never reduce expected unique; bounded by vocab
+    prev = 0.0
+    for t in (1, 10, 100, 1000):
+        cur = expected_unique_zipf(t, 64)
+        assert prev <= cur <= 64.0
+        prev = cur
+    with pytest.raises(ValueError):
+        sparsity.zipf_row_probs(16, 1.0)
+
+
+def test_declared_zipf_skew_informs_the_planner(tiny_shape):
+    """RunConfig.zipf_a switches the census to the skew-aware estimate."""
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    rc_uniform = RunConfig(capacity_mode="capped")
+    rc_zipf = dataclasses.replace(rc_uniform, zipf_a=1.3)
+    runner = get_runner(cfg, tiny_shape, rc_uniform)
+    plan_u = runner.plan
+    plan_z = get_runner(cfg, tiny_shape, rc_zipf).plan
+    local_tokens = tiny_shape.tokens
+    assert plan_u.alpha == pytest.approx(
+        expected_unique(local_tokens, 256) / 256)
+    assert plan_z.alpha == pytest.approx(
+        expected_unique_zipf(local_tokens, 256, 1.3) / 256)
+    assert plan_z.alpha < plan_u.alpha
+    assert plan_z.capacity < plan_u.capacity
+
+
+def test_zipf_row_probs_is_a_distribution():
+    p = sparsity.zipf_row_probs(512, 1.3)
+    assert p.shape == (512,)
+    assert np.all(p > 0)
+    assert abs(p.sum() - 1.0) < 1e-6
+    assert p[0] > p[-1]          # skewed toward low ids
+
+
+# ---------------------------------------------------------------------------
+# the sparsity profile EMA
+# ---------------------------------------------------------------------------
+
+def test_profile_ema_and_observed_census():
+    rc = RunConfig(capacity_mode="capped", capacity_factor=2.0)
+    prof = SparsityProfile(decay=0.5)
+    assert not prof.ready()
+    prof.update({"loss": 3.0})                   # no census keys: ignored
+    assert not prof.ready()
+    prof.update({"embed_unique": 40.0, "loss": 3.0})
+    prof.update({"embed_unique": 20.0})
+    assert prof.ready(2)
+    assert prof.ema["embed_unique"] == pytest.approx(30.0)
+    base = sparsity.Census(dense_params=10, sparse_params=100, alpha=0.5,
+                           local_tokens=64, capacity=64)
+    obs = observed_census(prof, base, vocab=200, run_cfg=rc)
+    assert obs.alpha == pytest.approx(30.0 / 200)
+    assert obs.capacity == 60                    # ceil(30 * 2.0)
+    assert obs.local_tokens == base.local_tokens
+    # exact capacity mode never resizes buffers from the profile
+    obs_exact = observed_census(prof, base, vocab=200, run_cfg=RunConfig())
+    assert obs_exact.capacity == base.capacity
+    # empty profile is a no-op
+    assert observed_census(SparsityProfile(), base, 200, rc) is base
+
+
+def test_step_metrics_carry_observed_unique(tiny_shape):
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    runner = get_runner(cfg, tiny_shape,
+                        RunConfig(attention_impl="naive", remat="none"))
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch)
+    m = runner.run(ds.batch(0))
+    got = float(m["embed_unique"])
+    want = float(np.unique(ds.batch(0)["tokens"]).size)
+    assert got == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# staged planning purity + replan round-trips
+# ---------------------------------------------------------------------------
+
+def _methods(plan):
+    import jax
+    from repro.core.plan import ParamPlan
+    return {p.name: p.method for p in jax.tree.leaves(
+        plan.params, is_leaf=lambda x: isinstance(x, ParamPlan))}
+
+
+def test_plan_from_census_equals_from_scratch(tiny_shape):
+    """analyze(census=c) must equal a from-scratch analyze whose estimate
+    is c — planning is a pure function of (model, rt, census)."""
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    rc = RunConfig(capacity_mode="capped")
+    runner = get_runner(cfg, tiny_shape, rc)
+    census = estimate_census(runner.model, runner.rt)
+    replanned = analyze(runner.model, runner.rt, census=census)
+    staged = choose_methods(runner.model, runner.rt, census)
+    for other in (replanned, staged):
+        assert _methods(other) == _methods(runner.plan)
+        assert other.capacity == runner.plan.capacity
+        assert other.alpha == runner.plan.alpha
+        d = plan_diff(runner.plan, other)
+        assert not d["changed"] and not d["flips"]
+
+
+def test_noop_replan_keeps_params_bit_identical(tiny_shape):
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    runner = get_runner(cfg, tiny_shape,
+                        RunConfig(attention_impl="naive", remat="none"))
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch)
+    runner.run(ds.batch(0))
+    before = {"embed": np.asarray(runner.state.params["embed"]).copy(),
+              "m": np.asarray(runner.state.m["embed"]).copy()}
+    census = estimate_census(runner.model, runner.rt)
+    d = runner.replan(census)
+    assert not d["changed"] and not d["rebuilt"]     # same census: no-op
+    d = runner.replan(census, force=True)            # force the rebuild path
+    assert d["rebuilt"]
+    np.testing.assert_array_equal(before["embed"],
+                                  np.asarray(runner.state.params["embed"]))
+    np.testing.assert_array_equal(before["m"],
+                                  np.asarray(runner.state.m["embed"]))
+    # the swapped-in step still trains
+    m = runner.run(ds.batch(1))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_capacity_drift_triggers_replan(tiny_shape):
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    rc = RunConfig(attention_impl="naive", remat="none",
+                   capacity_mode="capped", capacity_factor=1.0)
+    runner = get_runner(cfg, tiny_shape, rc)
+    cap0 = runner.plan.capacity
+    prof = SparsityProfile()
+    prof.update({"embed_unique": cap0 / 4})
+    census = observed_census(prof, estimate_census(runner.model, runner.rt),
+                             cfg.vocab_size, rc)
+    d = runner.replan(census)
+    assert d["capacity_drifted"] and d["rebuilt"]
+    assert runner.plan.capacity < cap0
+
+
+def test_trainer_replan_hook_and_monitor(tiny_shape, tmp_path):
+    from repro.runtime.trainer import Trainer, TrainerConfig
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    rc = RunConfig(attention_impl="naive", remat="none",
+                   capacity_mode="capped", capacity_factor=1.5)
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch)
+    tcfg = TrainerConfig(total_steps=8, replan_every=4, replan_warmup=2,
+                         replan_drift=1.3)
+    t = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    cap0 = t.plan.capacity
+    stats = []
+    t.run(on_metrics=lambda s, m: stats.append(m))
+    # Zipf data vs uniform estimate: the capacity must have shrunk
+    assert t.monitor.replans >= 1
+    assert t.plan.capacity < cap0
+    assert t.plan.alpha < cap0 / cfg.vocab_size
+    assert "observed_alpha" in stats[-1]
+    assert stats[-1]["replans"] == t.monitor.replans
+    assert all(np.isfinite(m["loss"]) for m in stats)
+
+
+def test_remesh_uses_existing_state_without_init(tiny_shape, monkeypatch):
+    """The elastic rebuild must not materialize a throwaway model.init."""
+    from repro.runtime.trainer import Trainer, TrainerConfig
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    rc = RunConfig(attention_impl="naive", remat="none")
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch)
+    t = Trainer(cfg, tiny_shape, rc, TrainerConfig(total_steps=2), ds)
+    t.run()
+    before = np.asarray(t.state.params["embed"]).copy()
+    step_before = int(t.state.step)
+
+    def boom(*a, **k):
+        raise AssertionError("remesh materialized a fresh model.init")
+
+    monkeypatch.setattr(type(t.model), "init", boom)
+    t.remesh(None)
+    np.testing.assert_array_equal(before,
+                                  np.asarray(t.state.params["embed"]))
+    assert int(t.state.step) == step_before
+    # and the rebuilt step still runs on the restored state
+    t.tcfg = dataclasses.replace(t.tcfg, total_steps=3)
+    t.run()
+    assert t.step == 3
+
+
+# ---------------------------------------------------------------------------
+# distributed: method-flipping replan preserves the loss trajectory
+# ---------------------------------------------------------------------------
+
+@pytest.mark.distributed
+def test_method_flipping_replan_preserves_trajectory():
+    """On a (4 data x 2 model) mesh with Zipf ids, the uniform estimate
+    plans `ps` but the observed α is below the ps/ps_gather crossover: the
+    replan must flip the embedding method, keep pspecs (no host round-trip),
+    and reproduce the static run's losses exactly (correctness contract
+    across a hot-swap)."""
+    code = """
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.core.sparsity import SparsityProfile, observed_census
+from repro.core.transform import estimate_census, get_runner
+from repro.data import SyntheticLM
+
+cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+shape = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
+kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
+          compute_dtype="float32", wire_dtype="float32",
+          capacity_mode="capped", capacity_factor=2.0)
+ds = SyntheticLM(cfg.vocab_size, 32, 8)
+mesh = make_mesh((4, 2), ("data", "model"))
+
+def drive(adaptive):
+    with use_mesh(mesh):
+        run = get_runner(cfg, shape, RunConfig(**kw), mesh=mesh)
+        first = run.plan.embed_method
+        prof = SparsityProfile()
+        losses, flips, pspecs_changed = [], [], False
+        for i in range(8):
+            m = run.run(ds.batch(i))
+            losses.append(float(m["loss"]))
+            prof.update({k: float(v) for k, v in m.items()
+                         if getattr(v, "ndim", 0) == 0})
+            if adaptive and i == 3:
+                census = observed_census(
+                    prof, estimate_census(run.model, run.rt),
+                    cfg.vocab_size, run.rt.run_cfg)
+                d = run.replan(census)
+                flips = d["flips"]
+                pspecs_changed = d["pspecs_changed"]
+        return dict(first=first, last=run.plan.embed_method, losses=losses,
+                    flips=flips, pspecs_changed=pspecs_changed,
+                    alpha=run.plan.alpha)
+
+static = drive(False)
+adaptive = drive(True)
+print("RESULT:" + json.dumps({"static": static, "adaptive": adaptive}))
+"""
+    res = distributed_run(code, devices=8, timeout=600)
+    st, ad = res["static"], res["adaptive"]
+    assert st["first"] == st["last"] == "ps"
+    assert ad["first"] == "ps" and ad["last"] == "ps_gather", ad
+    assert ad["flips"], "replan did not flip any method"
+    assert not ad["pspecs_changed"]      # row-sharded either way: state stays
+    assert ad["alpha"] < st["alpha"]     # observed < uniform estimate
+    for i, (a, b) in enumerate(zip(st["losses"], ad["losses"])):
+        assert abs(a - b) < 5e-4 + 1e-4 * i, (i, st["losses"], ad["losses"])
