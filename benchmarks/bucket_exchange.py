@@ -1,0 +1,101 @@
+"""Bucketed vs per-tensor dense-gradient exchange (core/buckets.py).
+
+Runs the same distributed train step twice on 8 fake devices — per-tensor
+(bucket_bytes=0) and bucketed — and reports, straight from the compiled
+post-SPMD HLO (utils/hlo.py):
+
+  * all-reduce count per step (the α·messages term bucketing removes),
+  * per-chip collective wire bytes (must stay ~equal: bucketing fuses
+    messages, it does not change what is exchanged),
+  * max |loss| divergence over 3 steps (must be float-noise),
+  * the cost-model seconds for both exchanges (HW.link_latency model),
+  * median wall step time for both (CPU wall time is only a sanity signal).
+
+Emits the CSV lines every benchmark emits plus machine-readable
+``BENCH_exchange.json`` next to the repo root.
+
+    PYTHONPATH=src python -m benchmarks.run buckets
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit, run_with_devices
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_exchange.json")
+
+_CODE = """
+import time
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.core.plan import ParamPlan
+from repro.core.transform import get_runner
+from repro.data import SyntheticLM
+from repro.utils.hlo import analyze_hlo
+
+cfg = reduced(get_config("seamless-m4t-medium"))    # 26 dense param tensors
+shape = ShapeConfig("bench", seq_len=32, global_batch=8, kind="train")
+kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
+          compute_dtype="float32", wire_dtype="float32")
+ds = SyntheticLM(cfg.vocab_size, 32, 8, is_encdec=True,
+                 frames_dim=cfg.d_model, frames_len=8)
+mesh = make_mesh((8, 1), ("data", "model"))
+
+def drive(bucket_bytes):
+    with use_mesh(mesh):
+        run = get_runner(cfg, shape,
+                         RunConfig(**kw, bucket_bytes=bucket_bytes),
+                         mesh=mesh)
+        hlo = analyze_hlo(
+            run.train_step.lower(run.state, ds.batch(0)).compile().as_text())
+        losses, times = [], []
+        for i in range(6):
+            t0 = time.perf_counter()
+            m = run.run(ds.batch(i))
+            losses.append(float(m["loss"]))
+            times.append(time.perf_counter() - t0)
+        bp = run.plan.bucket_plan
+        return {
+            "all_reduce_count": hlo.collective_count.get("all-reduce", 0),
+            "all_gather_count": hlo.collective_count.get("all-gather", 0),
+            "collective_wire_bytes": hlo.collective_bytes,
+            "losses": losses[:3],
+            "median_step_s": sorted(times[3:])[len(times[3:]) // 2],
+            "bucket_stats": bp.stats() if bp else None,
+        }
+
+flat = drive(0)
+fused = drive(4 * 1024 * 1024)
+n_dense = 26
+print("RESULT:" + json.dumps({
+    "n_dense_params": n_dense,
+    "per_tensor": flat,
+    "bucketed": fused,
+    "loss_divergence": max(abs(a - b) for a, b in
+                           zip(flat["losses"], fused["losses"])),
+}))
+"""
+
+
+def main() -> None:
+    res = run_with_devices(_CODE, devices=8)
+    flat, fused = res["per_tensor"], res["bucketed"]
+    stats = fused["bucket_stats"]
+    emit("buckets/all_reduce_count",
+         fused["all_reduce_count"],
+         f"per_tensor={flat['all_reduce_count']};"
+         f"n_dense={res['n_dense_params']}")
+    emit("buckets/wire_bytes", fused["collective_wire_bytes"],
+         f"per_tensor={flat['collective_wire_bytes']:.0f}")
+    emit("buckets/est_exchange_us", stats["est_seconds"] * 1e6,
+         f"per_tensor_us={stats['est_seconds_unbucketed'] * 1e6:.1f};"
+         f"n_buckets={stats['n_buckets']}")
+    emit("buckets/loss_divergence", res["loss_divergence"],
+         f"steps=3;dtype=f32")
+    with open(OUT, "w") as f:
+        json.dump(res, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.normpath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,25 @@ def main():
         vmem_kb = (128 * d * 2 * 3 + 128 * d * 4 + 128 * 8) / 1024
         emit(f"kernels/flash_ref/b{b}s{s}h{h}d{d}", sec * 1e6,
              f"kernel_vmem_kb={vmem_kb:.0f};blocks=128x128")
+    # sparse hot path: PS pull (embed_gather) / push (embed_scatter_add).
+    # Interpret-mode wall time is meaningless, so we time the jnp reference
+    # (what a TPU-less run executes) and report the kernel's analytic DMA
+    # working set: ids live in SMEM, one (1, E) row block moves per grid
+    # step — n_ids·E·itemsize streamed, never the (Vs, E) table.
+    for (vs, e, n) in [(4096, 512, 1024), (32768, 1024, 4096)]:
+        ks = jax.random.split(jax.random.key(2), 3)
+        table = jax.random.normal(ks[0], (vs, e), jnp.float32)
+        ids = jax.random.randint(ks[1], (n,), -vs // 2, 2 * vs)
+        rows = jax.random.normal(ks[2], (n, e), jnp.float32)
+        uids = jnp.sort(jnp.unique(ids, size=n, fill_value=2 * vs))
+        gfn = jax.jit(lambda t, i: ref.embed_gather_ref(t, i, 0))
+        sec = time_fn(gfn, table, ids)
+        emit(f"kernels/embed_gather_ref/v{vs}e{e}n{n}", sec * 1e6,
+             f"dma_kb={n * e * 4 / 1024:.0f};ids_smem_kb={n * 4 / 1024:.0f}")
+        sfn = jax.jit(lambda i, r: ref.embed_scatter_add_ref(i, r, vs))
+        sec = time_fn(sfn, uids, rows)
+        emit(f"kernels/embed_scatter_ref/v{vs}e{e}n{n}", sec * 1e6,
+             f"dma_kb={n * e * 4 / 1024:.0f};blocks=1x{e}")
     for (b, s, h, e) in [(2, 512, 4, 64)]:
         ks = jax.random.split(jax.random.key(1), 5)
         r = jax.random.normal(ks[0], (b, s, h, e), jnp.float32)

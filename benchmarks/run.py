@@ -12,7 +12,8 @@ import sys
 
 def main() -> None:
     which = set(sys.argv[1:]) or {"table1", "table3", "table4", "fig13",
-                                  "roofline", "kernels", "adaptive"}
+                                  "roofline", "kernels", "adaptive",
+                                  "buckets"}
     if "table1" in which:
         from benchmarks import table1_census
         table1_census.main()
@@ -34,6 +35,9 @@ def main() -> None:
     if "adaptive" in which:
         from benchmarks import adaptive_replan
         adaptive_replan.main()
+    if "buckets" in which:
+        from benchmarks import bucket_exchange
+        bucket_exchange.main()
 
 
 if __name__ == "__main__":

@@ -35,6 +35,8 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--zipf-a", type=float, default=1.3,
                     help="token skew (natural-text-like embedding sparsity)")
+    ap.add_argument("--bucket-bytes", type=int, default=4 * 1024 * 1024,
+                    help="fused dense-gradient bucket size; 0 = per-tensor")
     ap.add_argument("--replan-every", type=int, default=0,
                     help="profile->replan period in steps (0 = static plan)")
     args = ap.parse_args()
@@ -49,7 +51,7 @@ def main():
     rc = RunConfig(attention_impl="chunked", attention_chunk=128,
                    remat="none", learning_rate=1e-3,
                    capacity_mode="capped" if args.replan_every else "exact",
-                   capacity_factor=1.5)
+                   capacity_factor=1.5, bucket_bytes=args.bucket_bytes)
     ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch,
                      zipf_a=args.zipf_a)
     tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,

@@ -157,6 +157,24 @@ class RunConfig:
     # §Perf knobs (beyond-paper optimizations; default off = paper-faithful)
     explicit_sp: bool = False         # explicit AG/RS sequence-parallel blocks
     dense_strategy: str = "tp"        # tp | dp (dp: model axis joins data)
+    # §Exchange-schedule knobs: these change how the Table-3 plan *executes*
+    # (collective fusion, kernel choice), never what is exchanged — wire
+    # bytes, placement, and math are those of the paper's plan (summation
+    # order aside), so bucketing defaults on. Set bucket_bytes=0 for the
+    # per-tensor baseline.
+    # bucketed dense-gradient exchange (core/buckets.py): fuse per-tensor
+    # all-reduces into flat buffers of at most this many wire bytes. 0
+    # disables. Applies on data-parallel meshes (every non-batch axis size
+    # 1); elsewhere the planner falls back to per-tensor collectives.
+    bucket_bytes: int = 4 * 1024 * 1024
+    # embedding gather/scatter implementation for the sparse hot path:
+    # jnp (take/scatter-add) | pallas (kernels/embed_gather + embed_scatter,
+    # interpret-mode off-TPU)
+    embed_impl: str = "jnp"
+    # per-message collective latency override (seconds) for the planner's
+    # α + β·b argmin; None = utils/roofline.py HW.link_latency. 0 recovers
+    # the paper's pure-byte Table-3 argmin.
+    link_latency: Optional[float] = None
     # attention implementation: naive (tests) | chunked (dry-run) | pallas (TPU)
     attention_impl: str = "chunked"
     attention_chunk: int = 1024

@@ -10,4 +10,5 @@ from repro.core.transform import (
 from repro.core.sparsity import (
     SparsityProfile, observed_census, expected_unique, expected_unique_zipf,
 )
-from repro.core import cost_model, sparsity, embedding, xent
+from repro.core import buckets, cost_model, sparsity, embedding, xent
+from repro.core.buckets import BucketPlan, assign_buckets

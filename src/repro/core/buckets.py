@@ -1,0 +1,282 @@
+"""Bucketed dense-gradient exchange (Horovod-style tensor fusion, in JAX).
+
+The hybrid plan minimizes *bytes* on the wire, but under global semantics
+XLA materializes one all-reduce per gradient tensor at its producing op —
+so a model with n dense parameters pays n per-message latencies (the α in
+α + β·b, see core/cost_model.py) however small the tensors are. GSPMD has
+no "unreduced" value state, so no downstream concatenation can merge those
+collectives; the only place the exchange can be fused is *before* XLA ever
+sees a global gradient.
+
+This module therefore traces loss+grad inside one full-manual ``shard_map``
+over the mesh: inside, gradients are per-replica partials and aggregation
+is written explicitly —
+
+  * dense (method == allreduce) gradients are flattened into a few flat
+    wire-dtype buffers of at most ``RunConfig.bucket_bytes`` each, grouped
+    by (method, exchange dtype, pspec); each buffer rides ONE psum,
+  * the loss and every scalar metric ride a single fused scalar psum,
+  * the sparse push keeps its own schedule: the embedding custom_vjp runs
+    its per-device body directly on the live named axes (EmbedCtx.manual).
+
+Applicability (``bucketable``): pure data-parallel meshes — every mesh axis
+that is not a batch axis has size 1, every dense parameter exchanges by
+all-reduce, and the model opens no nested shard_map of its own (MoE EP
+does). Anywhere else ``assign_buckets`` returns None and the planner keeps
+the per-tensor global-semantics path. Correctness contract: the bucketed
+step computes what the unbucketed step computes (same plan, same math;
+summation order differs only within float tolerance) — tests/test_perf_paths
+asserts the 3-step trajectory at f32 and the collective-count drop in HLO.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compat import P, shard_map
+from repro.core import cost_model
+from repro.core.plan import ParamPlan, Plan
+from repro.core.runtime import manual_region
+from repro.utils.roofline import HW
+
+
+def _plan_leaves(plan: Plan) -> list[ParamPlan]:
+    return jax.tree.leaves(plan.params,
+                           is_leaf=lambda x: isinstance(x, ParamPlan))
+
+
+def _effective_pspec(pspec, mesh) -> tuple:
+    """Pspec with size-1 mesh axes dropped — the *physical* layout. Two
+    parameters whose pspecs differ only in size-1 axes shard identically,
+    so their flattened gradients can share a fused buffer."""
+    out = []
+    for e in pspec:
+        axes = (e,) if isinstance(e, str) else tuple(e or ())
+        axes = tuple(a for a in axes if mesh.shape[a] > 1)
+        out.append(axes[0] if len(axes) == 1 else (axes or None))
+    return tuple(x for x in out if x is not None)
+
+
+@dataclass(frozen=True)
+class Bucket:
+    key: tuple        # (method, wire dtype name, pspec entries) group key
+    idx: tuple        # leaf positions in the flattened grads/plan tree
+    sizes: tuple      # element count per member
+    nbytes: int       # fused buffer wire bytes
+
+
+@dataclass
+class BucketPlan:
+    buckets: list
+    batch_axes: tuple      # the manual/psum axes of the exchange
+    replicas: int          # N: product of the batch axis sizes
+    n_params: int          # bucketed gradient tensors
+    wire_bytes: int        # sum of fused buffer bytes
+    bucket_bytes: int      # the RunConfig knob that sized the buckets
+    hw: Any = None         # the hardware model the planner priced against
+
+    def stats(self, hw=None) -> dict:
+        """Exchange accounting for runtime/monitor.py — the cost-model view
+        of what bucketing saved (per step, dense push only), priced with
+        the same hardware model the planner's argmin used."""
+        hw = hw or self.hw or HW
+        ring = 2.0 * (self.replicas - 1) / max(self.replicas, 1)
+        return {
+            "n_buckets": len(self.buckets),
+            "n_params_bucketed": self.n_params,
+            "n_collectives_dense": len(self.buckets),
+            "n_collectives_unbucketed": self.n_params,
+            "wire_bytes": self.wire_bytes,
+            "bucket_bytes": self.bucket_bytes,
+            "est_seconds": cost_model.exchange_seconds(
+                ring * self.wire_bytes, len(self.buckets), hw),
+            "est_seconds_unbucketed": cost_model.exchange_seconds(
+                ring * self.wire_bytes, self.n_params, hw),
+        }
+
+
+def _exchange_dtype(rt) -> Any:
+    """The dtype a dense gradient rides the wire at — mirrors the OPSW cast
+    in the unbucketed step (f32 grads drop to wire_dtype; everything else
+    ships as-is)."""
+    d = jnp.dtype(rt.param_dtype)
+    if rt.run_cfg.opsw and d == jnp.dtype(jnp.float32):
+        return rt.wire_dtype
+    return d
+
+
+def bucketable(plan: Plan, rt) -> bool:
+    """Can this plan's dense exchange run as a manual bucketed region?"""
+    if plan.mesh is None or rt.run_cfg.bucket_bytes <= 0:
+        return False
+    if rt.shape_cfg.kind != "train":
+        return False
+    ba = tuple(rt.batch_axes)
+    if not ba or rt.replicas <= 1:
+        return False
+    # the loss must trace collective-free per replica: no TP/SP/EP axis may
+    # be live (the model would need manual collectives this module doesn't
+    # write), and MoE opens a nested shard_map of its own.
+    for a in plan.mesh.axis_names:
+        if a not in ba and plan.mesh.shape[a] != 1:
+            return False
+    if rt.model_cfg.n_experts > 0:
+        return False
+    for p in _plan_leaves(plan):
+        if not p.sparse and p.method != "allreduce":
+            return False          # fsdp pull/push needs its own manual path
+        if p.sparse and p.method not in ("allreduce", "mpi_gatherv", "dense"):
+            return False          # ps variants need model-axis shards anyway
+    return True
+
+
+def assign_buckets(plan: Plan, rt) -> Optional[BucketPlan]:
+    """Group dense all-reduce parameters into fused exchange buffers.
+
+    Greedy first-fit in tree-flatten order (≈ backward-producer order under
+    scan-over-layers): a parameter joins the open bucket of its
+    (method, exchange dtype, pspec) group until the bucket reaches
+    ``RunConfig.bucket_bytes``, then a new one opens. Sparse parameters
+    whose argmin picked a sparse method keep their own exchange.
+
+    The tied-embedding coherence rule: under a manual region a gatherv'd
+    table gradient would mix a replica-summed sparse part with a local
+    dense part (the tied head matmul) — unscalable by one factor. The
+    planner resolves it by flipping such tables to the dense bucket
+    (pspec is already replicated for mpi_gatherv, so only the method moves).
+    """
+    if not bucketable(plan, rt):
+        return None
+    if rt.model_cfg.tie_embeddings and plan.embed_method == "mpi_gatherv":
+        def untie(p: ParamPlan):
+            if p.sparse and p.method == "mpi_gatherv":
+                p.method = "allreduce"
+            return p
+        jax.tree.map(untie, plan.params,
+                     is_leaf=lambda x: isinstance(x, ParamPlan))
+        plan.embed_method = "allreduce"
+
+    itemsize = jnp.dtype(_exchange_dtype(rt)).itemsize
+    cap = max(int(rt.run_cfg.bucket_bytes), itemsize)
+    groups: dict[tuple, list] = {}
+    for i, p in enumerate(_plan_leaves(plan)):
+        if p.method != "allreduce":
+            continue
+        n = p.bytes // jnp.dtype(rt.param_dtype).itemsize
+        key = (p.method, jnp.dtype(_exchange_dtype(rt)).name,
+               _effective_pspec(p.pspec, plan.mesh))
+        open_buckets = groups.setdefault(key, [[]])
+        if open_buckets[-1] and \
+                sum(s for _, s, _ in open_buckets[-1]) * itemsize + \
+                n * itemsize > cap:
+            open_buckets.append([])
+        open_buckets[-1].append((i, n, None))
+
+    buckets = []
+    for key, bs in groups.items():
+        for members in bs:
+            if not members:
+                continue
+            idx = tuple(i for i, _, _ in members)
+            sizes = tuple(s for _, s, _ in members)
+            buckets.append(Bucket(key=key, idx=idx, sizes=sizes,
+                                  nbytes=sum(sizes) * itemsize))
+    if not buckets:
+        return None
+    return BucketPlan(
+        buckets=buckets, batch_axes=tuple(rt.batch_axes),
+        replicas=rt.replicas, n_params=sum(len(b.idx) for b in buckets),
+        wire_bytes=sum(b.nbytes for b in buckets),
+        bucket_bytes=int(rt.run_cfg.bucket_bytes),
+        hw=cost_model.resolve_hw(rt.run_cfg))
+
+
+def plan_buckets(plan: Plan, rt) -> None:
+    """Planner hook: (re)compute the bucket assignment for a plan in place.
+    Runs after memory escalation so method flips to fsdp veto bucketing;
+    re-runs on every replan so the assignment tracks the live plan."""
+    plan.bucket_plan = assign_buckets(plan, rt)
+
+
+# ---------------------------------------------------------------------------
+# the fused exchange step
+# ---------------------------------------------------------------------------
+
+def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
+    """(params, batch) -> ((loss, metrics), grads), grads pre-aggregated.
+
+    A drop-in for jax.value_and_grad(loss_fn, has_aux=True) whose gradient
+    collectives are the bucketed exchange. Inside the manual body gradients
+    are grads of the *local* mean loss; since the global loss is the equal-
+    weight mean of local losses, the true gradient is their pmean — applied
+    as a 1/N pre-scale (mirroring the 1/T the unbucketed mean bakes in)
+    followed by the fused psum. Sparse gatherv gradients arrive replica-
+    summed from the embedding push and take only the 1/N.
+    """
+    bp: BucketPlan = plan.bucket_plan
+    assert bp is not None and plan.mesh is not None
+    leaf = lambda x: isinstance(x, ParamPlan)
+    pspecs = jax.tree.map(lambda p: p.pspec, plan.params, is_leaf=leaf)
+    bspecs = {
+        k: P(*([bp.batch_axes] + [None] * (len(v.shape) - 1)))
+        if len(v.shape) else P()
+        for k, v in model.input_specs().items()
+    }
+    scale = 1.0 / bp.replicas
+    bucketed = {i for b in bp.buckets for i in b.idx}
+
+    def body(params, batch):
+        with manual_region():
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, batch)
+        gleaves, gtree = jax.tree_util.tree_flatten(grads)
+        out = list(gleaves)
+        for b in bp.buckets:
+            wdt = jnp.dtype(b.key[1])
+            parts = [(gleaves[i].astype(jnp.float32) * scale
+                      ).astype(wdt).reshape(-1) for i in b.idx]
+            buf = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+            buf = jax.lax.psum(buf, bp.batch_axes)     # ONE dense collective
+            off = 0
+            for i, sz in zip(b.idx, b.sizes):
+                out[i] = buf[off:off + sz].reshape(gleaves[i].shape)
+                off += sz
+        for i, g in enumerate(gleaves):
+            if i not in bucketed:
+                # sparse push already exchanged inside the lookup's VJP
+                # (replica-summed); only the loss-mean 1/N remains
+                out[i] = (g.astype(jnp.float32) * scale).astype(g.dtype)
+        grads_out = jax.tree_util.tree_unflatten(gtree, out)
+
+        # fused scalar reduction: loss + every scalar metric, one psum;
+        # rank>=1 metric leaves (none today) pmean individually — returning
+        # them raw through out_specs=P() would silently pass one device's
+        # local value off as the global metric
+        mleaves, mtree = jax.tree_util.tree_flatten(metrics)
+        scalar_pos = [j for j, x in enumerate(mleaves)
+                      if jnp.ndim(x) == 0]
+        vec = jnp.stack([loss.astype(jnp.float32)] +
+                        [mleaves[j].astype(jnp.float32)
+                         for j in scalar_pos])
+        vec = jax.lax.psum(vec, bp.batch_axes) * scale
+        loss_out = vec[0]
+        for k, j in enumerate(scalar_pos):
+            mleaves[j] = vec[1 + k]
+        for j, x in enumerate(mleaves):
+            if jnp.ndim(x) > 0:
+                mleaves[j] = jax.lax.psum(
+                    x.astype(jnp.float32), bp.batch_axes) * scale
+        metrics_out = jax.tree_util.tree_unflatten(mtree, mleaves)
+        return loss_out, metrics_out, grads_out
+
+    fn = shard_map(body, mesh=plan.mesh, in_specs=(pspecs, bspecs),
+                   out_specs=(P(), P(), pspecs), check_vma=False)
+
+    def value_and_grad_fn(params, batch):
+        loss, metrics, grads = fn(params, batch)
+        return (loss, metrics), grads
+
+    return value_and_grad_fn

@@ -1,4 +1,4 @@
-"""Table 3 of the paper, generalized (DESIGN.md §2).
+"""Table 3 of the paper, generalized (DESIGN.md §2) — now latency-aware.
 
 Per-chip wire bytes per training step for one parameter of size ``b`` bytes:
 
@@ -14,12 +14,37 @@ Per-chip wire bytes per training step for one parameter of size ``b`` bytes:
     mpi_gatherv:           2 (N-1) α b            [paper Table 3, sparse-MPI]
 
 N = total replicas (data·pod), M = model-axis size, D = data(+pod) size.
-The planner picks argmin per parameter; RunConfig.comm_mode can force the
-paper's baselines (ps / mpi).
+
+Bytes alone mispredict small parameters: each collective also pays a fixed
+per-message launch latency (the α term in Shi et al.'s α + β·b model,
+arXiv:1711.05979), so the planner's argmin runs over *seconds*:
+
+  t(method) = messages(method) · HW.link_latency + wire_bytes / HW.link_bw
+
+``method_messages`` counts the collective launches each method issues per
+step, and ``exchange_seconds`` is the shared α + β·b evaluator — the same
+model core/buckets.py uses to score fusing n dense all-reduces into k
+bucketed ones. RunConfig.comm_mode can still force the paper's baselines
+(ps / mpi).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
+from typing import Optional
+
+from repro.utils.roofline import HW, Hardware
+
+
+def resolve_hw(run_cfg=None, hw: Optional[Hardware] = None) -> Hardware:
+    """The hardware model the planner prices against: the roofline HW,
+    with RunConfig.link_latency (when set) overriding the α term — the
+    config path for pinning the pure-byte Table-3 argmin (link_latency=0)
+    without mutating module state."""
+    hw = hw or HW
+    ll = getattr(run_cfg, "link_latency", None) if run_cfg is not None else None
+    if ll is not None:
+        hw = replace(hw, link_latency=float(ll))
+    return hw
 
 
 @dataclass(frozen=True)
@@ -49,8 +74,9 @@ def dense_fsdp_bytes(b: float, dims: MeshDims) -> float:
     if n <= 1:
         return 0.0
     # all-gather params (fwd+bwd counted once: XLA rematerializes the gather
-    # in bwd under remat; we count the roofline-honest 2x) + reduce-scatter
-    return 2.0 * (n - 1) / n * b + 0.0  # ring AG+RS == AR volume; ≈ 2b for large N
+    # in bwd under remat; we count the roofline-honest 2x) + reduce-scatter;
+    # ring AG+RS == AR volume, ≈ 2b for large N
+    return 2.0 * (n - 1) / n * b
 
 
 def sparse_ps_bytes(b: float, alpha: float, dims: MeshDims) -> float:
@@ -74,22 +100,63 @@ def sparse_mpi_bytes(b: float, alpha: float, dims: MeshDims) -> float:
     return 2.0 * (n - 1) * alpha * b
 
 
-def choose_method(*, b: float, sparse: bool, alpha: float, dims: MeshDims,
-                  comm_mode: str = "hybrid", memory_forced_fsdp: bool = False,
-                  can_shard_rows: bool = True) -> tuple[str, dict]:
-    """Pick the exchange method for one parameter; returns (method, costs).
-
-    can_shard_rows: False when no mesh axis can row-shard the table (e.g.
-    the dp dense strategy uses every axis for batch) — the PS family is then
-    infeasible and the sparse param competes as dense allreduce vs gatherv.
-    """
-    costs = {
+def method_bytes(b: float, alpha: float, dims: MeshDims) -> dict:
+    return {
         "allreduce": dense_allreduce_bytes(b, dims),
         "fsdp": dense_fsdp_bytes(b, dims),
         "ps": sparse_ps_bytes(b, alpha, dims),
         "ps_gather": sparse_ps_gather_bytes(b, alpha, dims),
         "mpi_gatherv": sparse_mpi_bytes(b, alpha, dims),
     }
+
+
+def method_messages(method: str, dims: MeshDims) -> int:
+    """Collective launches per step for one parameter under ``method``."""
+    m, d = dims.model, dims.replicas
+    if method == "allreduce":
+        return 1 if d > 1 else 0
+    if method == "fsdp":
+        return 2 if d > 1 else 0                    # all-gather + reduce-scatter
+    if method == "ps":                              # pull psum + push shard psum
+        return (1 if m > 1 else 0) + (1 if d > 1 else 0)
+    if method == "ps_gather":                       # pull psum + (ids, rows) AG
+        return (1 if m > 1 else 0) + (2 if d > 1 else 0)
+    if method == "mpi_gatherv":                     # (ids, rows) all-gather
+        return 2 if d > 1 else 0
+    raise ValueError(f"unknown method {method!r}")
+
+
+def exchange_seconds(wire_bytes: float, messages: float,
+                     hw: Hardware = HW) -> float:
+    """The α + β·b transfer model: messages·α + bytes/bandwidth."""
+    return messages * hw.link_latency + wire_bytes / hw.link_bw
+
+
+def method_seconds(*, b: float, alpha: float, dims: MeshDims,
+                   hw: Hardware = HW) -> dict:
+    """Per-method step seconds for one parameter (the planner's argmin)."""
+    bts = method_bytes(b, alpha, dims)
+    return {k: exchange_seconds(v, method_messages(k, dims), hw)
+            for k, v in bts.items()}
+
+
+def choose_method(*, b: float, sparse: bool, alpha: float, dims: MeshDims,
+                  comm_mode: str = "hybrid", memory_forced_fsdp: bool = False,
+                  can_shard_rows: bool = True,
+                  hw: Optional[Hardware] = None) -> tuple[str, dict]:
+    """Pick the exchange method for one parameter; returns (method, costs).
+
+    ``costs`` keys are per-chip wire bytes (Table 3); the argmin itself runs
+    over ``method_seconds`` so a small sparse parameter whose gatherv bytes
+    undercut a dense all-reduce can still lose on message count.
+
+    can_shard_rows: False when no mesh axis can row-shard the table (e.g.
+    the dp dense strategy uses every axis for batch) — the PS family is then
+    infeasible and the sparse param competes as dense allreduce vs gatherv.
+    """
+    hw = hw or HW
+    costs = method_bytes(b, alpha, dims)
+    secs = method_seconds(b=b, alpha=alpha, dims=dims, hw=hw)
     if not sparse:
         if comm_mode == "ps" or memory_forced_fsdp:
             return "fsdp", costs
@@ -103,7 +170,7 @@ def choose_method(*, b: float, sparse: bool, alpha: float, dims: MeshDims,
             cands += ["ps", "ps_gather"]
         if not cands:
             cands = ["mpi_gatherv"]
-        best = min(cands, key=lambda k: costs[k])
+        best = min(cands, key=lambda k: secs[k])
         return best, costs
     raise ValueError(f"unknown comm_mode {comm_mode!r}")
 
@@ -120,12 +187,9 @@ def pick_dense_strategy(cfg, shape, dims: MeshDims, hbm_bytes: float = 16e9,
     if cfg.n_experts or shape.kind == "decode" or dims.model <= 1:
         return "tp"
     chips = dims.chips
-    if shape.global_batch % chips != 0 and             shape.global_batch % (dims.data * dims.model) != 0:
+    if shape.global_batch % chips != 0 and \
+            shape.global_batch % (dims.data * dims.model) != 0:
         return "tp"
-    if cfg.vocab_size * cfg.d_model * param_dtype_bytes > 0.25 * hbm_bytes:
-        # replicated embedding table would crowd out HBM... unless the
-        # alternative is worse; keep the conservative bound
-        pass
     t_repl = shape.tokens / max(dims.replicas, 1)
     m = dims.model
     tp_unit = t_repl * cfg.d_model * param_dtype_bytes * (m - 1) / m

@@ -49,6 +49,11 @@ class EmbedCtx:
     wire_dtype: Any             # dtype on the wire (OPSW)
     local_agg: bool             # C2: dedupe before exchange
     exact: bool = True          # exact capacity: size buffer per call-site
+    manual: bool = False        # already inside a manual (shard_map) region:
+                                # run the per-device bodies directly — the
+                                # batch axes are live named axes (the
+                                # bucketed-exchange path, core/buckets.py)
+    impl: str = "jnp"           # gather/scatter impl: jnp | pallas kernels
 
     @property
     def model_shards(self) -> int:
@@ -67,17 +72,19 @@ class EmbedCtx:
         return n
 
 
-def _count_unique(ids_flat: jax.Array) -> jax.Array:
-    sorted_ids = jnp.sort(ids_flat)
-    return 1 + jnp.sum(sorted_ids[1:] != sorted_ids[:-1]).astype(jnp.int32)
-
-
 def _dedupe(ids_flat: jax.Array, capacity: int, vocab_padded: int,
             local_agg: bool
             ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """dedupe + observed census: also returns the true unique count
     (pre-capacity) — the in-graph sparsity measurement the runtime profiler
-    consumes (core/sparsity.py::SparsityProfile)."""
+    consumes (core/sparsity.py::SparsityProfile).
+
+    One argsort produces everything: the sorted order gives first-occurrence
+    flags, their cumsum is each id's unique rank ("slot"), and scattering
+    first occurrences by slot rebuilds the ascending unique buffer —
+    byte-compatible with ``jnp.unique(size=capacity, fill_value=...)`` +
+    a separate census sort, at half the sorts.
+    """
     t = ids_flat.shape[0]
     if not local_agg:
         # no dedupe: the activated row-buffer is the raw token count. The
@@ -88,13 +95,21 @@ def _dedupe(ids_flat: jax.Array, capacity: int, vocab_padded: int,
                 jnp.zeros((), jnp.int32),
                 jnp.asarray(t, jnp.int32))
     capacity = min(capacity, t)
-    uids, inv = jnp.unique(
-        ids_flat, size=capacity, fill_value=vocab_padded, return_inverse=True)
-    n_unique = _count_unique(ids_flat)
+    order = jnp.argsort(ids_flat)                       # the one sort
+    sorted_ids = ids_flat[order].astype(jnp.int32)
+    first = jnp.concatenate([jnp.ones((1,), bool),
+                             sorted_ids[1:] != sorted_ids[:-1]])
+    n_unique = jnp.sum(first).astype(jnp.int32)
+    slot = (jnp.cumsum(first) - 1).astype(jnp.int32)    # unique rank, sorted
     dropped = jnp.maximum(n_unique - capacity, 0)
-    valid = uids[inv] == ids_flat
-    inv = jnp.where(valid, inv, capacity)
-    return uids.astype(jnp.int32), inv.astype(jnp.int32), dropped, n_unique
+    # ascending unique ids; slots past capacity overflow into a discard row
+    uids = jnp.full((capacity + 1,), vocab_padded, jnp.int32)
+    uids = uids.at[jnp.where(first & (slot < capacity), slot, capacity)
+                   ].set(sorted_ids)[:capacity]
+    # inverse: original position -> slot (capacity == overflowed sentinel)
+    inv = jnp.zeros((t,), jnp.int32).at[order].set(
+        jnp.minimum(slot, capacity))
+    return uids, inv, dropped, n_unique
 
 
 def dedupe(ids_flat: jax.Array, capacity: int, vocab_padded: int,
@@ -113,6 +128,37 @@ def dedupe(ids_flat: jax.Array, capacity: int, vocab_padded: int,
 # per-device bodies (never auto-differentiated)
 # ---------------------------------------------------------------------------
 
+def _gather_rows(table_shard, local_ids, ctx: EmbedCtx):
+    """Owned-row pull: rows for local-space ids in [0, Vs), zeros elsewhere.
+
+    The per-shard half of the PS pull — either the Pallas embed_gather
+    kernel (ids in SMEM drive the table DMA; interpret-mode off-TPU) or its
+    jnp oracle (kernels/ref.py — one source of truth for the take+mask
+    semantics), per ``RunConfig.embed_impl``.
+    """
+    if ctx.impl == "pallas":
+        from repro.kernels import ops
+        return ops.embed_gather(table_shard, local_ids)
+    from repro.kernels import ref
+    return ref.embed_gather_ref(table_shard, local_ids, 0)
+
+
+def _scatter_rows(local_ids, rows, vs: int, ctx: EmbedCtx):
+    """Owner-local push: scatter deduped cotangent rows into the (Vs, E)
+    f32 gradient shard, dropping unowned ids.
+
+    The Pallas embed_scatter_add kernel requires unique ids (the dedupe
+    buffer is sorted-unique), so it only serves the local_agg path; gathered
+    cross-replica buffers (ps_gather / mpi_gatherv) take the jnp oracle
+    (kernels/ref.py), whose scatter-add accumulates duplicates.
+    """
+    if ctx.impl == "pallas" and ctx.local_agg:
+        from repro.kernels import ops
+        return ops.embed_scatter_add(local_ids, rows, vs)
+    from repro.kernels import ref
+    return ref.embed_scatter_add_ref(local_ids, rows, vs)
+
+
 def _fwd_local(table_shard, ids_loc, ctx: EmbedCtx, capacity: int):
     """-> out (B_loc,S,E), uids (1,cap), inv (B_loc,S), dropped, uniq."""
     b_loc, s = ids_loc.shape
@@ -122,23 +168,22 @@ def _fwd_local(table_shard, ids_loc, ctx: EmbedCtx, capacity: int):
     # observed census: mean unique ids per replica-step (scalar; cheap).
     # Inside shard_map the count varies over the batch axes — average them
     # (a scalar psum, OPAU-style); over the model axis ids are replicated.
+    # In a manual (bucketed) region the average instead rides the fused
+    # scalar-metrics psum in core/buckets.py — no collective here.
     uniq = n_unique.astype(jnp.float32)
-    in_shard_map = ctx.mesh is not None and \
+    in_shard_map = ctx.mesh is not None and not ctx.manual and \
         ctx.method not in ("dense", "allreduce")
     if in_shard_map and ctx.batch_axes:
         uniq = jax.lax.psum(uniq, ctx.batch_axes) / ctx.replicas
     vs = table_shard.shape[0]
     if ctx.model_shards > 1:
         m = jax.lax.axis_index(ctx.model_axis)
-        local = uids - m * vs
-        owned = (local >= 0) & (local < vs)
-        rows = jnp.take(table_shard, jnp.clip(local, 0, vs - 1), axis=0)
-        rows = jnp.where(owned[:, None], rows, 0).astype(ctx.wire_dtype)
+        rows = _gather_rows(table_shard, uids - m * vs, ctx)
+        rows = rows.astype(ctx.wire_dtype)
         rows = jax.lax.psum(rows, ctx.model_axis)     # pull: ~2αb over model
         rows = rows.astype(table_shard.dtype)
     else:
-        rows = jnp.take(table_shard, jnp.clip(uids, 0, vs - 1), axis=0)
-        rows = jnp.where((uids < vs)[:, None], rows, 0)
+        rows = _gather_rows(table_shard, uids, ctx)
     rows_pad = jnp.concatenate([rows, jnp.zeros_like(rows[:1])], axis=0)
     out = jnp.take(rows_pad, inv, axis=0).reshape(b_loc, s, -1)
     return out, uids[None], inv.reshape(b_loc, s), dropped, uniq
@@ -155,7 +200,9 @@ def _bwd_local(uids_row, inv_loc, d_out_loc, vs_shard, ctx: EmbedCtx):
     d_rows = d_rows[:cap].astype(ctx.wire_dtype)
 
     if ctx.method == "mpi_gatherv":
-        # paper's MPI baseline: all-gather (ids, rows) over every replica
+        # paper's MPI baseline: all-gather (ids, rows) over every replica.
+        # Gathered ids duplicate across replicas -> jnp scatter-add (the
+        # overwrite-style Pallas kernel needs unique ids), via local_agg=False
         if ctx.batch_axes:
             uids_all = jax.lax.all_gather(uids, ctx.batch_axes,
                                           tiled=False).reshape(-1)
@@ -163,11 +210,8 @@ def _bwd_local(uids_row, inv_loc, d_out_loc, vs_shard, ctx: EmbedCtx):
                                           tiled=False).reshape(-1, d_rows.shape[-1])
         else:
             uids_all, rows_all = uids, d_rows
-        idx = jnp.where((uids_all >= 0) & (uids_all < vs_shard),
-                        uids_all, vs_shard)
-        d = jnp.zeros((vs_shard + 1, rows_all.shape[-1]), jnp.float32)
-        d = d.at[idx].add(rows_all.astype(jnp.float32))
-        return d[:vs_shard]
+        return _scatter_rows(uids_all, rows_all, vs_shard,
+                             _dc_replace(ctx, local_agg=False))
 
     m = jax.lax.axis_index(ctx.model_axis) if ctx.model_shards > 1 else 0
     if ctx.method == "ps_gather":
@@ -179,20 +223,11 @@ def _bwd_local(uids_row, inv_loc, d_out_loc, vs_shard, ctx: EmbedCtx):
                                           tiled=False).reshape(-1, d_rows.shape[-1])
         else:
             uids_all, rows_all = uids, d_rows
-        local = uids_all - m * vs_shard
-        owned = (local >= 0) & (local < vs_shard)
-        idx = jnp.where(owned, local, vs_shard)
-        d = jnp.zeros((vs_shard + 1, rows_all.shape[-1]), jnp.float32)
-        d = d.at[idx].add(rows_all.astype(jnp.float32))
-        return d[:vs_shard]
+        return _scatter_rows(uids_all - m * vs_shard, rows_all, vs_shard,
+                             _dc_replace(ctx, local_agg=False))
 
     # "ps": owner-local scatter-add + dense shard psum over replicas (2b/M)
-    local = uids - m * vs_shard
-    owned = (local >= 0) & (local < vs_shard)
-    idx = jnp.where(owned, local, vs_shard)
-    d = jnp.zeros((vs_shard + 1, d_rows.shape[-1]), jnp.float32)
-    d = d.at[idx].add(d_rows.astype(jnp.float32))
-    d = d[:vs_shard]
+    d = _scatter_rows(uids - m * vs_shard, d_rows, vs_shard, ctx)
     if ctx.batch_axes:
         d = jax.lax.psum(d.astype(ctx.wire_dtype), ctx.batch_axes
                          ).astype(jnp.float32)
@@ -210,7 +245,10 @@ def _lookup(table, ids, ctx: EmbedCtx, capacity: int):
 
 
 def _lookup_fwd_impl(table, ids, ctx: EmbedCtx, capacity: int):
-    if ctx.mesh is None or ctx.method in ("dense", "allreduce"):
+    if ctx.mesh is None or ctx.method in ("dense", "allreduce") or ctx.manual:
+        # dense/allreduce: global semantics, XLA owns the aggregation.
+        # manual: core/buckets.py already mapped the batch axes — the
+        # per-device body runs directly, its collectives on live named axes.
         out, uids, inv, dropped, uniq = _fwd_local(table, ids, ctx, capacity)
         return out, uids, inv, dropped, uniq
     ba = ctx.batch_axes or None
@@ -240,9 +278,15 @@ def _lookup_bwd(ctx: EmbedCtx, capacity: int, res, cts):
     if ctx.mesh is None or ctx.method in ("dense", "allreduce"):
         # global-semantics dense path: the scatter-add cotangent is the full
         # gradient; XLA inserts the dense all-reduce across replicas (no
-        # named-axis collectives outside shard_map)
+        # named-axis collectives outside shard_map). Under a manual region
+        # the same local partial gradient feeds the bucketed exchange.
         d_table = _bwd_local(uids, inv, d_out, vocab_rows,
                              _dc_replace(ctx, batch_axes=()))
+    elif ctx.manual:
+        # inside the bucketed-exchange manual region: the push collectives
+        # (all-gathers for mpi_gatherv) run on the live named axes; the
+        # resulting gradient is the replica-sum, rescaled by core/buckets.py
+        d_table = _bwd_local(uids, inv, d_out, vs, ctx)
     else:
         ba = ctx.batch_axes or None
         table_spec = P(None, None) if ctx.method == "mpi_gatherv" \
@@ -265,7 +309,9 @@ _lookup.defvjp(_lookup_fwd, _lookup_bwd)
 def lookup(table: jax.Array, ids: jax.Array, *, ctx: EmbedCtx,
            capacity: int) -> tuple[jax.Array, dict]:
     """Embedding lookup through the PS exchange. ids: (B, S) global ids."""
-    if ctx.mesh is not None and ctx.method in ("dense", "allreduce"):
+    if ctx.manual:
+        local_tokens = max(ids.size, 1)   # ids are already per-replica local
+    elif ctx.mesh is not None and ctx.method in ("dense", "allreduce"):
         local_tokens = ids.size        # global dedupe in global semantics
     else:
         local_tokens = max(ids.size // max(ctx.replicas, 1), 1)

@@ -155,6 +155,8 @@ class Plan:
     capacity: int = 0                  # sparse-exchange row capacity per replica
     zero_stage: int = 0
     embed_method: str = "ps"           # exchange method for sparse embeddings
+    bucket_plan: Any = None            # core/buckets.py BucketPlan (None =
+                                       # per-tensor dense collectives)
 
     # ---- totals for Table-1 style census ----
     def census(self) -> dict:
@@ -206,6 +208,8 @@ def plan_diff(old: Plan, new: Plan, capacity_drift: float = 1.5) -> dict:
         "capacity": (old.capacity, new.capacity),
         "alpha": (old.alpha, new.alpha),
         "embed_method": (old.embed_method, new.embed_method),
+        "buckets": (len(old.bucket_plan.buckets) if old.bucket_plan else 0,
+                    len(new.bucket_plan.buckets) if new.bucket_plan else 0),
     }
 
 

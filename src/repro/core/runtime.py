@@ -6,6 +6,8 @@ unit tests, smoke tests, and the 512-chip dry-run).
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -16,6 +18,33 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core.plan import MeshRules, Plan, default_rules
 from repro.core.embedding import EmbedCtx
+
+
+# ---------------------------------------------------------------------------
+# manual (shard_map) regions
+# ---------------------------------------------------------------------------
+# The bucketed gradient exchange (core/buckets.py) traces the whole loss
+# under a full-manual shard_map over the mesh. Model code written for global
+# semantics is told so via this trace-time flag: sharding constraints become
+# no-ops (arrays are per-device values; the batch axes are live named axes)
+# and the embedding exchange runs its per-device bodies directly instead of
+# opening a nested shard_map.
+
+_MANUAL_REGION = contextvars.ContextVar("repro_manual_region", default=False)
+
+
+@contextlib.contextmanager
+def manual_region():
+    """Mark the current trace as running inside a manual shard_map body."""
+    token = _MANUAL_REGION.set(True)
+    try:
+        yield
+    finally:
+        _MANUAL_REGION.reset(token)
+
+
+def in_manual_region() -> bool:
+    return _MANUAL_REGION.get()
 
 
 @dataclass
@@ -85,8 +114,9 @@ class Runtime:
         return n
 
     def constrain(self, x, axes: tuple):
-        """with_sharding_constraint by logical axes (no-op off-mesh)."""
-        if self.mesh is None:
+        """with_sharding_constraint by logical axes (no-op off-mesh and
+        inside manual regions, where x is a per-device value)."""
+        if self.mesh is None or in_manual_region():
             return x
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(self.mesh, self.rules.pspec(axes, x.shape)))
@@ -117,6 +147,8 @@ class Runtime:
             wire_dtype=self.wire_dtype,
             local_agg=self.run_cfg.local_agg,
             exact=self.run_cfg.capacity_mode == "exact",
+            manual=in_manual_region(),
+            impl=self.run_cfg.embed_impl,
         )
 
     @property

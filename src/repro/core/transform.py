@@ -35,7 +35,7 @@ import numpy as np
 from repro import compat
 from repro.compat import Mesh, NamedSharding, P
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
-from repro.core import cost_model, sparsity
+from repro.core import buckets, cost_model, sparsity
 from repro.core.plan import (MeshRules, ParamPlan, Plan, add_fsdp,
                              default_rules, per_device_bytes, plan_diff,
                              _pspec_shards)
@@ -85,6 +85,7 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
     specs = model.specs()
     dims = _mesh_dims(rt.mesh, rt.rules)
     comm_mode = rt.run_cfg.comm_mode
+    hw = cost_model.resolve_hw(rt.run_cfg)
     embed_method = "dense"
 
     can_shard_rows = rt.rules.axis_size("vocab") > 1
@@ -95,7 +96,7 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
         b = math.prod(spec.shape) * jnp.dtype(rt.param_dtype).itemsize
         method, costs = cost_model.choose_method(
             b=b, sparse=spec.sparse, alpha=census.alpha, dims=dims,
-            comm_mode=comm_mode, can_shard_rows=can_shard_rows)
+            comm_mode=comm_mode, can_shard_rows=can_shard_rows, hw=hw)
         pspec = rt.rules.pspec(spec.axes, spec.shape)
         if spec.sparse:
             embed_method = method if rt.mesh is not None else "dense"
@@ -129,6 +130,9 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
                 break
             plan = _escalate(plan, specs, rt, stage if stage else 1)
         plan.zero_stage = max(plan.zero_stage, 0)
+    # bucket the dense exchange (after escalation: fsdp flips veto it);
+    # replans re-enter here, so the assignment always tracks the live plan
+    buckets.plan_buckets(plan, rt)
     return plan
 
 
@@ -212,18 +216,31 @@ def batch_shardings(plan: Plan, batch_specs: dict):
 
 def make_train_step(model: Model, optimizer: Optimizer, rt: Runtime,
                     plan: Plan) -> Callable:
-    """(state, batch) -> (state, metrics); grads flow through the plan."""
+    """(state, batch) -> (state, metrics); grads flow through the plan.
+
+    With a bucket plan, loss+grad run inside core/buckets.py's manual
+    exchange region: dense gradients arrive pre-aggregated over a few fused
+    collectives (already at the wire dtype — the OPSW cast lives in the
+    exchange), and the optimizer consumes them per-tensor as always.
+    """
+    if plan.bucket_plan is not None:
+        value_and_grad = buckets.make_bucketed_value_and_grad(model, rt, plan)
+    else:
+        def value_and_grad(params, batch):
+            out, grads = jax.value_and_grad(
+                model.loss_fn, has_aux=True)(params, batch)
+            # OPSW: dense grads ride collectives at the wire dtype. In
+            # global semantics the aggregation psum is XLA-inserted at the
+            # dtype the gradient tensors carry — so cast before the
+            # constraint boundary.
+            if rt.run_cfg.opsw:
+                grads = jax.tree.map(
+                    lambda g: g.astype(rt.wire_dtype)
+                    if g.dtype == jnp.float32 else g, grads)
+            return out, grads
 
     def train_step(state: TrainState, batch: dict):
-        (loss, metrics), grads = jax.value_and_grad(
-            model.loss_fn, has_aux=True)(state.params, batch)
-        # OPSW: dense grads ride collectives at the wire dtype. In global
-        # semantics the aggregation psum is XLA-inserted at the dtype the
-        # gradient tensors carry — so cast before the constraint boundary.
-        if rt.run_cfg.opsw:
-            grads = jax.tree.map(
-                lambda g: g.astype(rt.wire_dtype)
-                if g.dtype == jnp.float32 else g, grads)
+        (loss, metrics), grads = value_and_grad(state.params, batch)
         new_state, opt_metrics = optimizer.update(state, grads)
         metrics = dict(metrics)
         metrics.update(opt_metrics)

@@ -3,6 +3,8 @@ oracle in ref.py and an interpret=True correctness sweep in tests/.
 
   flash_attention  blocked online-softmax attention (train/prefill)
   embed_gather     PS server-side sparse row pull (scalar-prefetch gather)
+  embed_scatter    PS server-side sparse push (ids-in-SMEM scatter of
+                   deduped cotangent rows into the table shard)
   wkv              RWKV6 chunked linear-attention recurrence
 """
 from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,62 @@
+"""PS server-side push as a Pallas TPU kernel (backward of the sparse pull).
+
+Scatters the deduped cotangent rows a replica produced into this shard's
+slice of the gradient table. The local-space row ids ride in scalar-prefetch
+memory (SMEM) and drive the *output* BlockSpec's index_map — grid step ``i``
+DMAs cotangent row ``i`` straight onto table row ``ids[i]``; no (Vs, E)
+one-hot matmul, no full-table scatter lowering.
+
+Contract (matches ``_bwd_local``'s owner-local scatter):
+  * ``ids`` are local-space (already offset by the shard's row base) and come
+    from the dedupe buffer: sorted ascending and unique among owned rows, so
+    every owned table row is written exactly once (a scatter-add over unique
+    indices degenerates to a scatter-write — the adds across duplicate ids
+    already happened in the segment-sum that built ``rows``).
+  * unowned ids (other shards' rows, negative after offsetting, or the
+    capacity sentinel) land in a dump row at index Vs that is sliced off.
+  * the output aliases a zeros buffer so rows no id touches read as zero
+    gradient; accumulation is in f32 regardless of the wire dtype of
+    ``rows``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scatter_kernel(ids_ref, rows_ref, zeros_ref, out_ref, *, vs: int):
+    del ids_ref, zeros_ref, vs  # routing happens in the output index_map
+    out_ref[0] = rows_ref[0].astype(out_ref.dtype)
+
+
+def embed_scatter_add(ids: jax.Array, rows: jax.Array, vs: int,
+                      *, interpret: bool = False) -> jax.Array:
+    """ids: (N,) local-space unique ids; rows: (N, E) -> (Vs, E) f32 grads."""
+    n, e = rows.shape
+
+    def out_index(i, ids_ref):
+        lid = ids_ref[i]
+        owned = jnp.logical_and(lid >= 0, lid < vs)
+        return (jnp.where(owned, lid, vs), 0)
+
+    kernel = functools.partial(_scatter_kernel, vs=vs)
+    zeros = jnp.zeros((vs + 1, e), jnp.float32)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n,),
+            in_specs=[pl.BlockSpec((1, e), lambda i, ids_ref: (i, 0)),
+                      pl.BlockSpec((1, e), out_index)],
+            out_specs=pl.BlockSpec((1, e), out_index),
+        ),
+        out_shape=jax.ShapeDtypeStruct((vs + 1, e), jnp.float32),
+        # the zeros buffer IS the output storage: untouched rows stay zero
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(ids.astype(jnp.int32), rows, zeros)
+    return out[:vs]

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import embed_gather as _eg
+from repro.kernels import embed_scatter as _es
 from repro.kernels import wkv as _wkv
 
 
@@ -35,6 +36,11 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
 def embed_gather(table_shard, ids, row_offset: int = 0):
     return _eg.embed_gather(table_shard, ids, row_offset,
                             interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("vs",))
+def embed_scatter_add(ids, rows, vs: int):
+    return _es.embed_scatter_add(ids, rows, vs, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

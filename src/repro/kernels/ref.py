@@ -31,6 +31,15 @@ def embed_gather_ref(table_shard, ids, row_offset: int) -> jax.Array:
     return jnp.where(owned[:, None], rows, 0)
 
 
+def embed_scatter_add_ref(ids, rows, vs: int) -> jax.Array:
+    """Server-side push: scatter-add cotangent `rows` onto the owned slice
+    of the gradient table. ids: (N,) local-space; rows: (N, E) -> (Vs, E)
+    f32 (unowned ids — negative or >= Vs — are dropped)."""
+    idx = jnp.where((ids >= 0) & (ids < vs), ids, vs)
+    d = jnp.zeros((vs + 1, rows.shape[-1]), jnp.float32)
+    return d.at[idx].add(rows.astype(jnp.float32))[:vs]
+
+
 def wkv_ref(r, k, v, lw, bonus, state) -> tuple[jax.Array, jax.Array]:
     """RWKV6 WKV, sequential oracle.
 

@@ -30,6 +30,12 @@ def _parse():
     ap.add_argument("--capacity-mode", default="exact",
                     choices=("exact", "capped"))
     ap.add_argument("--capacity-factor", type=float, default=1.0)
+    ap.add_argument("--bucket-bytes", type=int, default=4 * 1024 * 1024,
+                    help="fused dense-gradient bucket size; 0 = per-tensor")
+    ap.add_argument("--embed-impl", default="jnp",
+                    choices=("jnp", "pallas"),
+                    help="embedding gather/scatter kernels (pallas = TPU "
+                    "Pallas, interpret-mode off-TPU)")
     ap.add_argument("--zipf-a", type=float, default=1.3,
                     help="skew of the synthetic token distribution")
     ap.add_argument("--plan-zipf", action="store_true",
@@ -83,6 +89,7 @@ def main():
         capacity_mode=args.capacity_mode,
         capacity_factor=args.capacity_factor,
         zipf_a=args.zipf_a if args.plan_zipf else None,
+        bucket_bytes=args.bucket_bytes, embed_impl=args.embed_impl,
         learning_rate=args.lr, remat=args.remat,
         attention_impl=args.attention, seed=args.seed)
     mesh = None

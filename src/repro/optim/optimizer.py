@@ -10,6 +10,12 @@ Correctness rules from the paper (§3.1, §5.3.2) enforced structurally:
     (same sharding as the parameter, optionally further sharded by ZeRO-1).
   * EMA shadow parameters update when their parameter updates, on the same
     shard (the paper's moving-average placement rule).
+
+Gradients arrive pre-aggregated either way the exchange ran: per-tensor
+(XLA-inserted collectives, global semantics) or bucketed (core/buckets.py
+fuses the dense push into flat buffers and unflattens before handing them
+here) — so the update, clipping, and the moments stay per-tensor and
+placement-identical under both exchanges; nothing below may re-aggregate.
 """
 from __future__ import annotations
 

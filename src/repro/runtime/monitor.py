@@ -30,6 +30,8 @@ class StepMonitor:
     total_tokens: int = 0
     observed_alpha: Optional[float] = None   # latest measured sparse α
     replans: int = 0                         # plan hot-swaps so far
+    exchange: Optional[dict] = None          # bucketed-exchange accounting
+                                             # (core/buckets.py stats)
 
     def start(self):
         self._last = time.perf_counter()
@@ -39,6 +41,11 @@ class StepMonitor:
 
     def note_replan(self):
         self.replans += 1
+
+    def note_exchange(self, stats: Optional[dict]):
+        """Record the live plan's dense-exchange shape: bucket count, fused
+        wire bytes, and per-step collective launches (None = per-tensor)."""
+        self.exchange = dict(stats) if stats else None
 
     def stop(self, tokens: int = 0) -> dict:
         dt = time.perf_counter() - self._last
@@ -59,6 +66,9 @@ class StepMonitor:
         }
         if self.observed_alpha is not None:
             stats["observed_alpha"] = self.observed_alpha
+        if self.exchange is not None:
+            stats["n_collectives"] = self.exchange["n_collectives_dense"]
+            stats["exchange"] = self.exchange
         return stats
 
     def median(self) -> float:

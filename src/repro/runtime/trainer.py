@@ -93,6 +93,8 @@ class Trainer:
         self.train_step, self.state, self.shardings = build_step(
             self.model, self.optimizer, self.rt, self.plan, state,
             seed=self.run_cfg.seed)
+        self.monitor.note_exchange(
+            self.plan.bucket_plan.stats() if self.plan.bucket_plan else None)
 
     # ------------------------------------------------------------------
     def maybe_restore(self):
@@ -142,6 +144,8 @@ class Trainer:
         self.train_step, self.state, self.shardings = apply_replan(
             self.model, self.optimizer, self.rt, new_plan, self.state, diff)
         self.monitor.note_replan()
+        self.monitor.note_exchange(
+            new_plan.bucket_plan.stats() if new_plan.bucket_plan else None)
         return diff
 
     # ------------------------------------------------------------------

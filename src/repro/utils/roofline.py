@@ -5,6 +5,10 @@ Hardware model: TPU v5e-like chip.
   HBM bandwidth     : 819 GB/s per chip
   ICI link bandwidth: ~50 GB/s per link (we use per-chip aggregate = 1 link
                       as the conservative spec-mandated constant)
+  ICI link latency  : ~1 us per collective launch (the α in the α + β·b
+                      transfer model; core/cost_model.py charges it per
+                      message so many small collectives cost more than one
+                      fused one — the term the gradient bucketing removes)
 
 Conventions (documented because the spec formula mixes global/per-chip):
   * ``cost_analysis()`` on the compiled (post-SPMD) module reports *per-chip*
@@ -26,6 +30,7 @@ class Hardware:
     hbm_bw: float = 819e9           # bytes/s per chip
     link_bw: float = 50e9           # bytes/s per chip (ICI)
     hbm_bytes: float = 16e9         # HBM capacity per chip
+    link_latency: float = 1e-6      # seconds per collective message (α)
 
 
 HW = Hardware()

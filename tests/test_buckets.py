@@ -1,0 +1,127 @@
+"""core/buckets.py assignment logic — pure units, no devices needed."""
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import pytest
+
+from repro.compat import PartitionSpec as P
+from repro.core import buckets
+from repro.core.plan import ParamPlan, Plan
+
+
+def fake_mesh(**axes):
+    return SimpleNamespace(shape=dict(axes), axis_names=tuple(axes))
+
+
+def fake_rt(mesh, *, bucket_bytes=4 * 2**20, kind="train", batch=("data",),
+            replicas=8, experts=0, tied=False, opsw=True,
+            param_dtype="float32", wire_dtype="float32"):
+    return SimpleNamespace(
+        mesh=mesh,
+        batch_axes=batch,
+        replicas=replicas,
+        param_dtype=jnp.dtype(param_dtype),
+        wire_dtype=jnp.dtype(wire_dtype),
+        model_cfg=SimpleNamespace(n_experts=experts, tie_embeddings=tied),
+        shape_cfg=SimpleNamespace(kind=kind),
+        run_cfg=SimpleNamespace(bucket_bytes=bucket_bytes, opsw=opsw),
+    )
+
+
+def leaf(name, shape, method="allreduce", sparse=False, pspec=P(None, None),
+         dtype_bytes=4):
+    n = 1
+    for d in shape:
+        n *= d
+    return ParamPlan(name=name, method=method, pspec=pspec, opt_pspec=pspec,
+                     wire_dtype=jnp.float32, sparse=sparse,
+                     bytes=n * dtype_bytes)
+
+
+def fake_plan(leaves, mesh, embed_method="allreduce"):
+    return Plan(model_cfg=None, run_cfg=None, shape_cfg=None, mesh=mesh,
+                rules=None, params={p.name: p for p in leaves},
+                embed_method=embed_method)
+
+
+MESH = fake_mesh(data=8, model=1)
+
+
+def test_effective_pspec_drops_size1_axes():
+    assert buckets._effective_pspec(P("model", None), MESH) == ()
+    assert buckets._effective_pspec(P(None, "model"), MESH) == ()
+    assert buckets._effective_pspec(P(("model",), None), MESH) == ()
+    big = fake_mesh(data=2, model=4)
+    assert buckets._effective_pspec(P("model", None), big) == ("model",)
+
+
+def test_assign_groups_and_fills_by_bucket_bytes():
+    leaves = [leaf(f"w{i}", (64, 64)) for i in range(10)]   # 16 KiB each
+    plan = fake_plan(leaves, MESH)
+    rt = fake_rt(MESH, bucket_bytes=4 * 16384)              # 4 params/bucket
+    bp = buckets.assign_buckets(plan, rt)
+    assert bp is not None
+    assert [len(b.idx) for b in bp.buckets] == [4, 4, 2]
+    assert bp.n_params == 10
+    assert bp.wire_bytes == 10 * 16384
+    # one flat buffer each, element counts preserved
+    assert all(b.nbytes == sum(b.sizes) * 4 for b in bp.buckets)
+
+
+def test_assign_single_bucket_when_under_cap():
+    leaves = [leaf(f"w{i}", (8, 8), pspec=P("model", None) if i % 2 else
+              P(None, "model")) for i in range(6)]
+    plan = fake_plan(leaves, MESH)
+    bp = buckets.assign_buckets(plan, fake_rt(MESH))
+    # size-1 'model' shardings are physically identical -> one fused buffer
+    assert len(bp.buckets) == 1
+    assert bp.buckets[0].idx == tuple(range(6))
+
+
+def test_sparse_methods_keep_their_own_exchange():
+    leaves = [leaf("w0", (32, 32)),
+              leaf("emb", (128, 32), method="mpi_gatherv", sparse=True)]
+    plan = fake_plan(leaves, MESH, embed_method="mpi_gatherv")
+    bp = buckets.assign_buckets(plan, fake_rt(MESH))
+    assert bp.n_params == 1                      # the gatherv table stays out
+    assert plan.embed_method == "mpi_gatherv"
+
+
+def test_tied_gatherv_table_folds_into_the_bucket():
+    leaves = [leaf("w0", (32, 32)),
+              leaf("emb", (128, 32), method="mpi_gatherv", sparse=True)]
+    plan = fake_plan(leaves, MESH, embed_method="mpi_gatherv")
+    bp = buckets.assign_buckets(plan, fake_rt(MESH, tied=True))
+    assert plan.embed_method == "allreduce"      # coherence flip
+    assert bp.n_params == 2
+
+
+@pytest.mark.parametrize("veto", [
+    dict(bucket_bytes=0),
+    dict(kind="decode"),
+    dict(batch=(), replicas=1),
+    dict(experts=8),                             # MoE opens its own shard_map
+])
+def test_gate_vetos(veto):
+    plan = fake_plan([leaf("w0", (32, 32))], MESH)
+    assert buckets.assign_buckets(plan, fake_rt(MESH, **veto)) is None
+
+
+def test_gate_vetos_live_tp_axis_and_fsdp():
+    tp = fake_mesh(data=2, model=4)
+    plan = fake_plan([leaf("w0", (32, 32))], tp)
+    assert buckets.assign_buckets(plan, fake_rt(tp, batch=("data",),
+                                                replicas=2)) is None
+    plan2 = fake_plan([leaf("w0", (32, 32), method="fsdp")], MESH)
+    assert buckets.assign_buckets(plan2, fake_rt(MESH)) is None
+
+
+def test_stats_charge_the_latency_model():
+    leaves = [leaf(f"w{i}", (64, 64)) for i in range(10)]
+    plan = fake_plan(leaves, MESH)
+    bp = buckets.assign_buckets(plan, fake_rt(MESH))
+    s = bp.stats()
+    assert s["n_collectives_dense"] == 1
+    assert s["n_collectives_unbucketed"] == 10
+    saved = s["est_seconds_unbucketed"] - s["est_seconds"]
+    assert saved == pytest.approx(9 * buckets.HW.link_latency)
