@@ -82,6 +82,10 @@ def main():
         print(f"adaptive replans: {trainer.monitor.replans}  "
               f"(plan alpha {trainer.plan.alpha:.4f}, "
               f"capacity {trainer.plan.capacity})")
+        for t, e in sorted(trainer.plan.tables().items()):
+            print(f"  table {t}: method={e['method']} "
+                  f"capacity={e['capacity']} wire={e['wire_dtype']}"
+                  + ("  [overflow-grown]" if e["grown"] else ""))
     print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f}); "
           f"checkpoints in {args.ckpt_dir}")
 

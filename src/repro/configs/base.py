@@ -143,6 +143,13 @@ class RunConfig:
     # sparse-exchange capacity mode (static-shape TPU adaptation)
     capacity_mode: str = "exact"      # exact | capped
     capacity_factor: float = 1.0      # multiplier on expected unique rows
+    # overflow-driven capacity growth (capped mode): when a table's observed
+    # ``*_dropped`` EMA stays above ``overflow_tolerance`` rows/step, the
+    # replan loop regrows that table's capacity to
+    # ceil(observed_unique * capacity_factor * capacity_growth) — headroom
+    # past measured demand so one growth absorbs recurring bursts.
+    capacity_growth: float = 1.5
+    overflow_tolerance: float = 0.5
     # memory strategy for dense params (auto-escalated by the planner)
     zero_stage: int = 0               # 0: replicate, 1: shard opt state, 3: fsdp
     remat: str = "block"              # none | block | full
@@ -186,6 +193,21 @@ class RunConfig:
     # expected-unique under folded Zipf(zipf_a) instead of the uniform upper
     # bound (core/sparsity.py::expected_unique_zipf). None = uniform bound.
     zipf_a: Optional[float] = None
+    # per-table planner declarations (tuples of (table_name, value) pairs so
+    # the frozen config stays hashable): a table named here gets its own
+    # census skew / activated-fraction instead of the global zipf_a /
+    # sparsity_alpha — two tables with different skews legitimately land on
+    # different methods and capacities in one analyze() call.
+    table_zipf: tuple = ()            # e.g. (("embed", 1.3),)
+    table_alpha: tuple = ()           # e.g. (("enc_embed", 0.99),)
+    # profiled wire-dtype selection: when True, the replan loop reads the
+    # in-graph dense-gradient magnitude census (per-bucket |g|inf / rms
+    # scalars riding the fused metrics psum, core/buckets.py) and keeps a
+    # bucket's parameters at float32 on the wire when its peak-to-rms ratio
+    # exceeds ``wire_outlier_ratio`` (outlier-prone grads lose too much to
+    # bf16 rounding); everything else rides ``wire_dtype``.
+    wire_dtype_auto: bool = False
+    wire_outlier_ratio: float = 64.0
 
 
 def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,

@@ -38,14 +38,15 @@ import jax.numpy as jnp
 
 from repro.compat import P, shard_map
 from repro.core import cost_model
-from repro.core.plan import ParamPlan, Plan
+from repro.core.plan import ParamPlan, Plan, plan_leaves
 from repro.core.runtime import manual_region
 from repro.utils.roofline import HW
 
 
 def _plan_leaves(plan: Plan) -> list[ParamPlan]:
-    return jax.tree.leaves(plan.params,
-                           is_leaf=lambda x: isinstance(x, ParamPlan))
+    # the one flatten order bucket indices are defined against — shared with
+    # the trainer's wire_dtype_hints param_names via core/plan.plan_leaves
+    return plan_leaves(plan.params)
 
 
 def _effective_pspec(pspec, mesh) -> tuple:
@@ -98,13 +99,15 @@ class BucketPlan:
         }
 
 
-def _exchange_dtype(rt) -> Any:
+def _exchange_dtype(rt, p: Optional[ParamPlan] = None) -> Any:
     """The dtype a dense gradient rides the wire at — mirrors the OPSW cast
-    in the unbucketed step (f32 grads drop to wire_dtype; everything else
-    ships as-is)."""
+    in the unbucketed step (f32 grads drop to the parameter's planned wire
+    dtype; everything else ships as-is). Per-parameter: the magnitude-census
+    hints can pin individual parameters to f32, and the bucket group key
+    includes this dtype so buckets never mix wire precisions."""
     d = jnp.dtype(rt.param_dtype)
     if rt.run_cfg.opsw and d == jnp.dtype(jnp.float32):
-        return rt.wire_dtype
+        return jnp.dtype(p.wire_dtype) if p is not None else rt.wire_dtype
     return d
 
 
@@ -154,19 +157,20 @@ def assign_buckets(plan: Plan, rt) -> Optional[BucketPlan]:
         def untie(p: ParamPlan):
             if p.sparse and p.method == "mpi_gatherv":
                 p.method = "allreduce"
+                plan.table_methods[p.name] = "allreduce"
             return p
         jax.tree.map(untie, plan.params,
                      is_leaf=lambda x: isinstance(x, ParamPlan))
         plan.embed_method = "allreduce"
 
-    itemsize = jnp.dtype(_exchange_dtype(rt)).itemsize
-    cap = max(int(rt.run_cfg.bucket_bytes), itemsize)
     groups: dict[tuple, list] = {}
     for i, p in enumerate(_plan_leaves(plan)):
         if p.method != "allreduce":
             continue
+        itemsize = jnp.dtype(_exchange_dtype(rt, p)).itemsize
+        cap = max(int(rt.run_cfg.bucket_bytes), itemsize)
         n = p.bytes // jnp.dtype(rt.param_dtype).itemsize
-        key = (p.method, jnp.dtype(_exchange_dtype(rt)).name,
+        key = (p.method, jnp.dtype(_exchange_dtype(rt, p)).name,
                _effective_pspec(p.pspec, plan.mesh))
         open_buckets = groups.setdefault(key, [[]])
         if open_buckets[-1] and \
@@ -177,6 +181,7 @@ def assign_buckets(plan: Plan, rt) -> Optional[BucketPlan]:
 
     buckets = []
     for key, bs in groups.items():
+        itemsize = jnp.dtype(key[1]).itemsize
         for members in bs:
             if not members:
                 continue
@@ -232,15 +237,28 @@ def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
         with manual_region():
             (loss, metrics), grads = jax.value_and_grad(
                 model.loss_fn, has_aux=True)(params, batch)
+        metrics = dict(metrics)
+        grad_census = getattr(rt.run_cfg, "wire_dtype_auto", False)
         gleaves, gtree = jax.tree_util.tree_flatten(grads)
         out = list(gleaves)
-        for b in bp.buckets:
+        for k, b in enumerate(bp.buckets):
             wdt = jnp.dtype(b.key[1])
-            parts = [(gleaves[i].astype(jnp.float32) * scale
-                      ).astype(wdt).reshape(-1) for i in b.idx]
-            buf = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
-            buf = jax.lax.psum(buf, bp.batch_axes)     # ONE dense collective
-            off = 0
+            parts = [(gleaves[i].astype(jnp.float32) * scale).reshape(-1)
+                     for i in b.idx]
+            buf32 = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+            if grad_census:
+                # dense-gradient magnitude census: per-bucket |g|inf and rms
+                # of what rides the wire, pre-cast. The scalars join the
+                # fused metrics psum below, so the host sees the replica-
+                # *mean* of the per-replica maxima — a profile signal for
+                # wire-dtype selection (sparsity.wire_dtype_hints), not an
+                # exact global max. Only traced when the hints have a
+                # consumer (wire_dtype_auto).
+                metrics[f"gbucket{k}_gmax"] = jnp.max(jnp.abs(buf32))
+                metrics[f"gbucket{k}_grms"] = jnp.sqrt(
+                    jnp.mean(jnp.square(buf32)))
+            buf = jax.lax.psum(buf32.astype(wdt), bp.batch_axes)  # ONE dense
+            off = 0                                               # collective
             for i, sz in zip(b.idx, b.sizes):
                 out[i] = buf[off:off + sz].reshape(gleaves[i].shape)
                 off += sz

@@ -307,8 +307,13 @@ _lookup.defvjp(_lookup_fwd, _lookup_bwd)
 
 
 def lookup(table: jax.Array, ids: jax.Array, *, ctx: EmbedCtx,
-           capacity: int) -> tuple[jax.Array, dict]:
-    """Embedding lookup through the PS exchange. ids: (B, S) global ids."""
+           capacity: int, name: str = "embed") -> tuple[jax.Array, dict]:
+    """Embedding lookup through the PS exchange. ids: (B, S) global ids.
+
+    ``name`` keys the observed-census metrics (``{name}_unique`` /
+    ``{name}_dropped``) so a model with several sparse tables profiles each
+    one separately — the per-parameter replan loop reads them by table.
+    """
     if ctx.manual:
         local_tokens = max(ids.size, 1)   # ids are already per-replica local
     elif ctx.mesh is not None and ctx.method in ("dense", "allreduce"):
@@ -322,7 +327,7 @@ def lookup(table: jax.Array, ids: jax.Array, *, ctx: EmbedCtx,
         capacity = min(capacity, local_tokens, ctx.vocab_padded)
     out, dropped, uniq = _lookup(table, ids, ctx, capacity)
     nrows = capacity if ctx.local_agg else local_tokens
-    metrics = {"embed_rows": jnp.asarray(nrows, jnp.int32),
-               "embed_dropped": jax.lax.stop_gradient(dropped),
-               "embed_unique": jax.lax.stop_gradient(uniq)}
+    metrics = {f"{name}_rows": jnp.asarray(nrows, jnp.int32),
+               f"{name}_dropped": jax.lax.stop_gradient(dropped),
+               f"{name}_unique": jax.lax.stop_gradient(uniq)}
     return out.astype(table.dtype), metrics

@@ -131,6 +131,12 @@ class MeshRules:
 # per-parameter plan
 # ---------------------------------------------------------------------------
 
+def plan_leaves(tree: Any) -> list:
+    """Flatten a ParamPlan tree in leaf order (the order bucket indices and
+    gradient leaves share)."""
+    return jax.tree.leaves(tree, is_leaf=lambda x: isinstance(x, ParamPlan))
+
+
 @dataclass
 class ParamPlan:
     name: str
@@ -140,6 +146,7 @@ class ParamPlan:
     wire_dtype: Any
     sparse: bool
     bytes: int
+    capacity: int = 0                  # sparse tables: dedupe-buffer rows
     est_cost: dict = field(default_factory=dict)
 
 
@@ -152,11 +159,17 @@ class Plan:
     rules: MeshRules
     params: Any = None                 # tree of ParamPlan (aligned with specs)
     alpha: float = 1.0                 # estimated sparse-access ratio
-    capacity: int = 0                  # sparse-exchange row capacity per replica
+    capacity: int = 0                  # binding sparse-exchange row capacity
     zero_stage: int = 0
-    embed_method: str = "ps"           # exchange method for sparse embeddings
+    embed_method: str = "ps"           # the "embed" table's exchange method
     bucket_plan: Any = None            # core/buckets.py BucketPlan (None =
                                        # per-tensor dense collectives)
+    # ---- per-parameter planning (one record per sparse table) ----
+    table_methods: dict = field(default_factory=dict)   # name -> method
+    table_capacity: dict = field(default_factory=dict)  # name -> buffer rows
+    table_wire: dict = field(default_factory=dict)      # name -> jnp dtype
+    grown_tables: tuple = ()           # tables whose capacity the overflow
+                                       # rule grew in this plan's census
 
     # ---- totals for Table-1 style census ----
     def census(self) -> dict:
@@ -174,17 +187,37 @@ class Plan:
             out[p.method] = out.get(p.method, 0) + 1
         return out
 
+    def tables(self) -> dict:
+        """Per-sparse-table plan summary (JSON-friendly) — one entry per
+        table: its exchange method, buffer capacity, and wire dtype."""
+        return {t: {
+            "method": m,
+            "capacity": self.table_capacity.get(t, self.capacity),
+            "wire_dtype": jnp.dtype(self.table_wire[t]).name
+            if t in self.table_wire else None,
+            "grown": t in self.grown_tables,
+        } for t, m in self.table_methods.items()}
+
+
+def _drifted(old_cap: int, new_cap: int, factor: float) -> bool:
+    hi = max(old_cap, new_cap)
+    lo = max(min(old_cap, new_cap), 1)
+    return old_cap != new_cap and hi / lo >= factor
+
 
 def plan_diff(old: Plan, new: Plan, capacity_drift: float = 1.5) -> dict:
     """Structural diff between two Plans for the replan loop.
 
     ``changed`` is True when any parameter's exchange method flips, any
-    pspec/opt_pspec differs (state must reshard), or the sparse-exchange
-    capacity drifts by more than ``capacity_drift``x in either direction.
+    pspec/opt_pspec differs (state must reshard), any parameter's wire dtype
+    moves (the jitted step must re-trace), any table's capacity drifts by
+    more than ``capacity_drift``x in either direction, or the overflow rule
+    grew a table's capacity (growth is never deadbanded — sustained overflow
+    means rows are being silently zeroed under the live plan).
     """
     leaf = lambda x: isinstance(x, ParamPlan)
     olds = {p.name: p for p in jax.tree.leaves(old.params, is_leaf=leaf)}
-    flips, pspecs_changed = [], False
+    flips, wire_flips, pspecs_changed = [], [], False
     for p in jax.tree.leaves(new.params, is_leaf=leaf):
         q = olds.get(p.name)
         if q is None:
@@ -192,20 +225,33 @@ def plan_diff(old: Plan, new: Plan, capacity_drift: float = 1.5) -> dict:
             continue
         if p.method != q.method:
             flips.append((p.name, q.method, p.method))
+        if jnp.dtype(p.wire_dtype) != jnp.dtype(q.wire_dtype):
+            wire_flips.append((p.name, jnp.dtype(q.wire_dtype).name,
+                               jnp.dtype(p.wire_dtype).name))
         if tuple(p.pspec) != tuple(q.pspec) or \
                 tuple(p.opt_pspec) != tuple(q.opt_pspec):
             pspecs_changed = True
-    hi = max(old.capacity, new.capacity)
-    lo = max(min(old.capacity, new.capacity), 1)
-    capacity_drifted = old.capacity != new.capacity and \
-        hi / lo >= capacity_drift
+    capacity_drifted = _drifted(old.capacity, new.capacity, capacity_drift)
+    for t, cap in new.table_capacity.items():
+        if t in old.table_capacity:
+            capacity_drifted |= _drifted(old.table_capacity[t], cap,
+                                         capacity_drift)
+    capacity_grown = any(
+        new.table_capacity.get(t, 0) > old.table_capacity.get(t, 0)
+        for t in new.grown_tables)
     return {
-        "changed": bool(flips) or pspecs_changed or capacity_drifted,
+        "changed": bool(flips) or bool(wire_flips) or pspecs_changed
+                   or capacity_drifted or capacity_grown,
         "rebuilt": False,             # set by the caller that acts on the diff
         "flips": flips,
+        "wire_flips": wire_flips,
         "pspecs_changed": pspecs_changed,
         "capacity_drifted": capacity_drifted,
+        "capacity_grown": capacity_grown,
         "capacity": (old.capacity, new.capacity),
+        "table_capacity": (dict(old.table_capacity),
+                           dict(new.table_capacity)),
+        "table_methods": (dict(old.table_methods), dict(new.table_methods)),
         "alpha": (old.alpha, new.alpha),
         "embed_method": (old.embed_method, new.embed_method),
         "buckets": (len(old.bucket_plan.buckets) if old.bucket_plan else 0,

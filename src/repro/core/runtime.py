@@ -131,11 +131,13 @@ class Runtime:
         v = self.model_cfg.vocab_size
         return ((v + shards - 1) // shards) * shards
 
-    # ---- the Parallax sparse path ----
-    def embed_ctx(self) -> EmbedCtx:
-        method = "dense"
+    # ---- the Parallax sparse path (per-table: each sparse parameter can
+    # carry its own method, capacity, and wire dtype in the plan) ----
+    def embed_ctx(self, name: str = "embed") -> EmbedCtx:
+        method, wire = "dense", self.wire_dtype
         if self.plan is not None:
-            method = self.plan.embed_method
+            method = self.plan.table_methods.get(name, self.plan.embed_method)
+            wire = self.plan.table_wire.get(name, wire)
         elif self.mesh is not None:
             method = "ps" if self.run_cfg.comm_mode in ("hybrid", "ps") else "mpi_gatherv"
         return EmbedCtx(
@@ -144,19 +146,24 @@ class Runtime:
             batch_axes=self.batch_axes,
             model_axis="model" if (self.mesh and "model" in self.mesh.axis_names) else "",
             vocab_padded=self.padded_vocab,
-            wire_dtype=self.wire_dtype,
+            wire_dtype=wire,
             local_agg=self.run_cfg.local_agg,
             exact=self.run_cfg.capacity_mode == "exact",
             manual=in_manual_region(),
             impl=self.run_cfg.embed_impl,
         )
 
-    @property
-    def embed_capacity(self) -> int:
-        if self.plan is not None and self.plan.capacity:
-            return self.plan.capacity
+    def embed_capacity_for(self, name: str = "embed") -> int:
+        if self.plan is not None:
+            cap = self.plan.table_capacity.get(name, self.plan.capacity)
+            if cap:
+                return cap
         # exact fallback: local token count
         toks = self.shape_cfg.tokens // max(self.replicas, 1)
         if self.shape_cfg.kind == "decode":
             toks = max(self.shape_cfg.global_batch // max(self.replicas, 1), 1)
         return max(min(toks, self.padded_vocab), 8)
+
+    @property
+    def embed_capacity(self) -> int:
+        return self.embed_capacity_for("embed")

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.models.layers import ParamSpec
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.utils.tree import path_name
 
 
 def expected_unique(tokens: int, vocab: int) -> float:
@@ -73,29 +74,98 @@ def expected_unique_zipf(tokens: int, vocab: int, a: float = 1.3) -> float:
 
 
 @dataclass
+class TableCensus:
+    """Per-sparse-table workload record — the planner's unit of decision.
+
+    One entry per sparse parameter (embedding table): its row count, the
+    tokens that touch it per replica-step, the expected/observed unique rows,
+    and the exchange-buffer capacity derived from them. ``dropped`` carries
+    the observed overflow EMA (rows silently zeroed per step under the live
+    capacity); ``grown`` marks a capacity raised by the overflow-growth rule.
+    """
+    name: str
+    rows: int                  # table rows (padded vocab)
+    tokens: int                # per-replica tokens touching the table / step
+    unique: float              # expected (or observed-EMA) unique rows / step
+    alpha: float               # unique / rows
+    capacity: int
+    dropped: float = 0.0
+    grown: bool = False
+
+
+@dataclass
 class Census:
     dense_params: int
     sparse_params: int
     alpha: float               # per-replica activated fraction of sparse rows
     local_tokens: int
-    capacity: int              # static sparse-exchange buffer rows
+    capacity: int              # binding (largest) sparse-exchange capacity
+    tables: dict = field(default_factory=dict)   # name -> TableCensus
+    wire_dtypes: dict = field(default_factory=dict)  # param name -> dtype str
+                               # (profiled hints; see wire_dtype_hints)
+
+    def alpha_for(self, name: str) -> float:
+        t = self.tables.get(name)
+        return t.alpha if t is not None else self.alpha
+
+    def capacity_for(self, name: str) -> int:
+        t = self.tables.get(name)
+        return t.capacity if t is not None else self.capacity
+
+
+def _per_table(run_cfg: RunConfig, name: str, rows: int, tokens: int):
+    """(unique, alpha) for one table under its declared workload model:
+    per-table declarations (alpha, then zipf) beat the global knobs
+    (sparsity_alpha, then zipf_a, then the uniform bound)."""
+    t_alpha = dict(run_cfg.table_alpha).get(name)
+    if t_alpha is not None:
+        return t_alpha * rows, t_alpha
+    t_zipf = dict(run_cfg.table_zipf).get(name)
+    if t_zipf is None:
+        if run_cfg.sparsity_alpha is not None:
+            return run_cfg.sparsity_alpha * rows, run_cfg.sparsity_alpha
+        t_zipf = run_cfg.zipf_a
+    if t_zipf is not None and rows:
+        uniq = expected_unique_zipf(tokens, rows, t_zipf)
+    else:
+        uniq = expected_unique(tokens, rows)
+    return uniq, (uniq / rows if rows else 0.0)
+
+
+def _capacity(run_cfg: RunConfig, uniq: float, tokens: int, rows: int) -> int:
+    if run_cfg.capacity_mode == "exact":
+        cap = min(tokens, rows)
+    else:
+        cap = min(int(math.ceil(uniq * run_cfg.capacity_factor)), tokens, rows)
+    return max(cap, 8)
 
 
 def run_census(specs: Any, model_cfg: ModelConfig, shape_cfg: ShapeConfig,
                run_cfg: RunConfig, replicas: int) -> Census:
     dense = sparse = 0
-    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec)):
-        n = math.prod(s.shape)
-        if s.sparse:
-            sparse += n
-        else:
-            dense += n
-    if shape_cfg.kind == "train":
-        local_tokens = shape_cfg.tokens // max(replicas, 1)
-    elif shape_cfg.kind == "prefill":
+    tables: dict[str, TableCensus] = {}
+    leaves, _ = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    if shape_cfg.kind in ("train", "prefill"):
         local_tokens = shape_cfg.tokens // max(replicas, 1)
     else:  # decode: one token per sequence per step
         local_tokens = max(shape_cfg.global_batch // max(replicas, 1), 1)
+    for path, s in leaves:
+        n = math.prod(s.shape)
+        if s.sparse:
+            sparse += n
+            name = path_name(path)    # the shared dotted-name scheme: keys
+            rows = s.shape[0]         # here must match ParamPlan.name
+            uniq_t, alpha_t = _per_table(run_cfg, name, rows, local_tokens)
+            tables[name] = TableCensus(
+                name=name, rows=rows, tokens=local_tokens, unique=uniq_t,
+                alpha=alpha_t,
+                capacity=_capacity(run_cfg, uniq_t, local_tokens, rows))
+        else:
+            dense += n
+    # legacy binding aggregates (kept bit-compatible with the scalar-era
+    # planner): alpha from the unpadded vocab under the *global* knobs,
+    # capacity = the worst table's
     vocab = model_cfg.vocab_size
     if run_cfg.sparsity_alpha is not None:
         alpha = run_cfg.sparsity_alpha
@@ -106,25 +176,30 @@ def run_census(specs: Any, model_cfg: ModelConfig, shape_cfg: ShapeConfig,
         else:
             uniq = expected_unique(local_tokens, vocab)
         alpha = uniq / vocab if vocab else 0.0
-    if run_cfg.capacity_mode == "exact":
-        capacity = min(local_tokens, vocab)
-    else:
-        capacity = min(int(math.ceil(uniq * run_cfg.capacity_factor)), local_tokens, vocab)
-    capacity = max(capacity, 8)
-    return Census(dense, sparse, alpha, local_tokens, capacity)
+    capacity = _capacity(run_cfg, uniq, local_tokens, vocab)
+    if tables:
+        capacity = max(capacity, max(t.capacity for t in tables.values()))
+    return Census(dense, sparse, alpha, local_tokens, capacity, tables=tables)
 
 
 # ---------------------------------------------------------------------------
 # runtime profile: observed sparsity (the paper's early-iteration profiling)
 # ---------------------------------------------------------------------------
 
+# metric suffixes the profile EMAs: the sparse census (unique rows,
+# overflow) and the dense-gradient magnitude census (per-bucket |g|inf/rms)
+_PROFILE_SUFFIXES = ("_unique", "_dropped", "_gmax", "_grms")
+
+
 @dataclass
 class SparsityProfile:
-    """Host-side EMA of in-graph unique-row counts per sparse parameter.
+    """Host-side EMA of the in-graph workload census, one entry per metric.
 
-    The jitted step emits ``*_unique`` scalar metrics (mean unique ids per
-    replica-step, from core/embedding.py's dedupe census); ``update`` folds
-    each host-materialized metrics dict into an EMA. ``observed_census``
+    The jitted step emits ``{table}_unique`` / ``{table}_dropped`` scalars
+    per sparse table (core/embedding.py's dedupe census) and — under the
+    bucketed exchange — ``gbucket{i}_gmax`` / ``gbucket{i}_grms`` dense-
+    gradient magnitude scalars (core/buckets.py); ``update`` folds each
+    host-materialized metrics dict into per-metric EMAs. ``observed_census``
     turns the profile into a Census the planner re-runs on.
     """
     decay: float = 0.9
@@ -135,13 +210,13 @@ class SparsityProfile:
     def update(self, metrics: dict) -> None:
         seen = False
         for k, v in metrics.items():
-            if not k.endswith("_unique"):
+            if not k.endswith(_PROFILE_SUFFIXES):
                 continue
             try:
                 v = float(v)
             except (TypeError, ValueError):
                 continue
-            seen = True
+            seen = seen or k.endswith("_unique")
             self.last[k] = v
             prev = self.ema.get(k)
             self.ema[k] = v if prev is None else \
@@ -156,18 +231,61 @@ class SparsityProfile:
     def observed_unique(self) -> float:
         """Per-replica unique rows per step (max over sparse params — the
         capacity-binding table)."""
-        return max(self.ema.values(), default=0.0)
+        return max((v for k, v in self.ema.items() if k.endswith("_unique")),
+                   default=0.0)
+
+    def unique_for(self, table: str) -> Optional[float]:
+        return self.ema.get(f"{table}_unique")
+
+    def dropped_for(self, table: str) -> float:
+        return self.ema.get(f"{table}_dropped", 0.0)
+
+    def dropped(self, tables=None) -> dict:
+        """Per-table overflow EMA (rows silently zeroed per step) — the
+        signal the monitor surfaces and the growth rule acts on. ``tables``
+        (any container of table names) restricts the sweep to real sparse
+        tables: other subsystems also emit ``*_dropped`` scalars (e.g. the
+        MoE router's ``moe_dropped``) that are not buffer overflow."""
+        out = {k[:-len("_dropped")]: v for k, v in self.ema.items()
+               if k.endswith("_dropped")}
+        if tables is not None:
+            out = {k: v for k, v in out.items() if k in tables}
+        return out
 
     def alpha(self, vocab: int) -> float:
         return self.observed_unique / vocab if vocab else 0.0
 
+    def reset_grad_census(self) -> None:
+        """Drop the per-bucket magnitude EMAs. Bucket metrics are keyed by
+        *index*; after a replan regroups the buckets, index i names a
+        different member set, and blending old-layout samples into its EMA
+        would mis-attribute magnitudes across parameters."""
+        for d in (self.ema, self.last):
+            for k in [k for k in d if k.startswith("gbucket")]:
+                del d[k]
+
 
 def observed_census(profile: SparsityProfile, base: Census,
-                    vocab: int, run_cfg: RunConfig) -> Census:
+                    vocab: int, run_cfg: RunConfig,
+                    live: Optional[dict] = None) -> Census:
     """Fold a runtime profile into a planning Census.
 
-    α and capacity follow the measured EMA; totals and local_tokens stay
+    Per-table: each table whose ``{name}_unique`` EMA has data gets its own
+    measured α and capacity; a table whose ``{name}_dropped`` EMA stays above
+    ``run_cfg.overflow_tolerance`` gets *grown* capacity — measured demand
+    times ``capacity_factor * capacity_growth`` headroom (overflow means the
+    live buffer is provably too small; the plain re-fit alone could sit
+    inside the replan drift deadband forever). Totals and local_tokens stay
     structural (they don't drift at runtime).
+
+    ``live`` ({table: (capacity, grown)} from the running plan — the
+    trainer passes it) makes growth *sticky*: once the overflow stops, the
+    dropped EMA decays below tolerance, and a bare re-fit would shrink the
+    buffer by exactly ``capacity_growth`` — tripping the drift rule and
+    re-introducing the overflow in an endless grow/shrink/recompile cycle.
+    A previously-grown table therefore keeps growth-headroom sizing
+    (``ceil(unique · factor · growth)``) — once a buffer has overflowed it
+    stays provisioned with headroom, still tracking the demand EMA downward.
     """
     if not profile.ema or vocab <= 0:
         return base
@@ -179,4 +297,63 @@ def observed_census(profile: SparsityProfile, base: Census,
         capacity = min(int(math.ceil(uniq * run_cfg.capacity_factor)),
                        base.local_tokens, vocab)
     capacity = max(capacity, 8)
-    return replace(base, alpha=alpha, capacity=capacity)
+    tables = {}
+    for name, t in base.tables.items():
+        obs = profile.unique_for(name)
+        if obs is None or run_cfg.capacity_mode == "exact":
+            tables[name] = t
+            continue
+        # clip observed demand at rows only: a table on the dense/allreduce
+        # path dedupes *global* ids, so its true unique count legitimately
+        # exceeds the per-replica token estimate (lookup() re-clips the
+        # buffer to its call-site token count anyway)
+        uniq_t = min(obs, t.rows)
+        cap_fit = max(min(int(math.ceil(uniq_t * run_cfg.capacity_factor)),
+                          t.rows), 8)
+        headroom = min(int(math.ceil(uniq_t * run_cfg.capacity_factor *
+                                     run_cfg.capacity_growth)), t.rows)
+        dropped_t = profile.dropped_for(name)
+        live_cap, live_grown = (live or {}).get(name, (0, False))
+        if dropped_t > run_cfg.overflow_tolerance:
+            cap_t, grown = max(cap_fit, headroom), True
+        elif live_grown:
+            # sticky growth (see docstring): hold headroom sizing, tracking
+            # the demand EMA downward, never snapping back to the bare fit
+            cap_t = max(cap_fit, min(max(live_cap, cap_fit), headroom))
+            grown = cap_t > cap_fit
+        else:
+            cap_t, grown = cap_fit, False
+        tables[name] = replace(t, unique=uniq_t,
+                               alpha=uniq_t / t.rows if t.rows else 0.0,
+                               capacity=cap_t, dropped=dropped_t, grown=grown)
+    if tables:
+        capacity = max(capacity, max(t.capacity for t in tables.values()))
+    return replace(base, alpha=alpha, capacity=capacity, tables=tables)
+
+
+def wire_dtype_hints(profile: SparsityProfile, bucket_plan: Any,
+                     param_names: list, *, outlier_ratio: float,
+                     default: str = "bfloat16") -> dict:
+    """Profiled per-parameter wire-dtype selection from the dense-gradient
+    magnitude census.
+
+    Each bucket's ``gbucket{i}_gmax`` / ``gbucket{i}_grms`` EMAs summarize
+    the magnitudes its member gradients ride the wire at. A bucket whose
+    peak-to-rms ratio exceeds ``outlier_ratio`` is outlier-prone: bf16's
+    ~8-bit mantissa quantizes the small-magnitude bulk relative to the
+    outliers, so its members keep float32 on the wire; everybody else rides
+    ``default``. Returns {param name -> dtype str} for Census.wire_dtypes.
+    """
+    hints: dict[str, str] = {}
+    if bucket_plan is None:
+        return hints
+    for i, b in enumerate(bucket_plan.buckets):
+        gmax = profile.ema.get(f"gbucket{i}_gmax")
+        grms = profile.ema.get(f"gbucket{i}_grms")
+        if gmax is None or grms is None:
+            continue
+        choice = "float32" if gmax > outlier_ratio * max(grms, 1e-30) \
+            else default
+        for j in b.idx:
+            hints[param_names[j]] = choice
+    return hints

@@ -43,7 +43,7 @@ from repro.core.runtime import Runtime
 from repro.models.layers import ParamSpec
 from repro.models.model import Model, build_model
 from repro.optim.optimizer import Optimizer, TrainState, make_optimizer
-from repro.utils.tree import named_leaves
+from repro.utils.tree import named_leaves, path_name as tree_path_name
 from repro.utils.roofline import HW
 
 
@@ -86,20 +86,39 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
     dims = _mesh_dims(rt.mesh, rt.rules)
     comm_mode = rt.run_cfg.comm_mode
     hw = cost_model.resolve_hw(rt.run_cfg)
-    embed_method = "dense"
 
     can_shard_rows = rt.rules.axis_size("vocab") > 1
     strategy = getattr(rt, "resolved_strategy", rt.run_cfg.dense_strategy)
+    table_methods: dict[str, str] = {}
+    table_capacity: dict[str, int] = {}
+    table_wire: dict[str, Any] = {}
+
+    def _wire_for(name: str):
+        """OPSW wire dtype for one parameter: the census's profiled hint
+        (magnitude-census wire_dtype_hints) when present, else the global
+        knob. Hints only matter when OPSW casting is on at all."""
+        hint = census.wire_dtypes.get(name)
+        if hint is not None and rt.run_cfg.opsw:
+            return jnp.dtype(hint)
+        return rt.wire_dtype
 
     def plan_leaf(name: str, spec: ParamSpec) -> ParamPlan:
-        nonlocal embed_method
         b = math.prod(spec.shape) * jnp.dtype(rt.param_dtype).itemsize
+        # per-parameter pricing: each sparse table argmins at its *own*
+        # activated fraction, so a Zipf vocab table and a near-dense
+        # secondary table legitimately land on different methods
+        alpha = census.alpha_for(name) if spec.sparse else census.alpha
         method, costs = cost_model.choose_method(
-            b=b, sparse=spec.sparse, alpha=census.alpha, dims=dims,
+            b=b, sparse=spec.sparse, alpha=alpha, dims=dims,
             comm_mode=comm_mode, can_shard_rows=can_shard_rows, hw=hw)
         pspec = rt.rules.pspec(spec.axes, spec.shape)
+        capacity = 0
+        wire = _wire_for(name)
         if spec.sparse:
-            embed_method = method if rt.mesh is not None else "dense"
+            capacity = census.capacity_for(name)
+            table_methods[name] = method if rt.mesh is not None else "dense"
+            table_capacity[name] = capacity
+            table_wire[name] = wire
             if method in ("mpi_gatherv", "allreduce"):
                 # table replicated (paper's MPI baseline / dense-AR pick)
                 pspec = P(*([None] * len(spec.shape)))
@@ -109,18 +128,25 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
         if rt.run_cfg.zero_stage >= 1 and rt.mesh is not None and not spec.sparse:
             opt_pspec = add_fsdp(pspec, spec.shape, rt.mesh, strategy)
         return ParamPlan(name=name, method=method, pspec=pspec,
-                         opt_pspec=opt_pspec, wire_dtype=rt.wire_dtype,
-                         sparse=spec.sparse, bytes=int(b), est_cost=costs)
+                         opt_pspec=opt_pspec, wire_dtype=wire,
+                         sparse=spec.sparse, bytes=int(b), capacity=capacity,
+                         est_cost=costs)
 
     plans = jax.tree_util.tree_map_with_path(
-        lambda path, s: plan_leaf(
-            ".".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path), s),
+        lambda path, s: plan_leaf(tree_path_name(path), s),
         specs, is_leaf=lambda x: isinstance(x, ParamSpec))
 
+    # the "embed" table binds the legacy scalar; any sparse table otherwise
+    embed_method = table_methods.get(
+        "embed", next(iter(table_methods.values()), "dense"))
     plan = Plan(model_cfg=rt.model_cfg, run_cfg=rt.run_cfg,
                 shape_cfg=rt.shape_cfg, mesh=rt.mesh, rules=rt.rules,
                 params=plans, alpha=census.alpha, capacity=census.capacity,
-                zero_stage=rt.run_cfg.zero_stage, embed_method=embed_method)
+                zero_stage=rt.run_cfg.zero_stage, embed_method=embed_method,
+                table_methods=table_methods, table_capacity=table_capacity,
+                table_wire=table_wire,
+                grown_tables=tuple(sorted(
+                    n for n, t in census.tables.items() if t.grown)))
 
     # ---- memory escalation: replicate -> ZeRO-1 -> ZeRO-3 (auto-PS) ----
     if rt.mesh is not None:
@@ -229,14 +255,15 @@ def make_train_step(model: Model, optimizer: Optimizer, rt: Runtime,
         def value_and_grad(params, batch):
             out, grads = jax.value_and_grad(
                 model.loss_fn, has_aux=True)(params, batch)
-            # OPSW: dense grads ride collectives at the wire dtype. In
-            # global semantics the aggregation psum is XLA-inserted at the
-            # dtype the gradient tensors carry — so cast before the
-            # constraint boundary.
+            # OPSW: dense grads ride collectives at each parameter's planned
+            # wire dtype (profiled per-bucket magnitude census can pin
+            # outlier-prone parameters to f32). In global semantics the
+            # aggregation psum is XLA-inserted at the dtype the gradient
+            # tensors carry — so cast before the constraint boundary.
             if rt.run_cfg.opsw:
                 grads = jax.tree.map(
-                    lambda g: g.astype(rt.wire_dtype)
-                    if g.dtype == jnp.float32 else g, grads)
+                    lambda g, p: g.astype(p.wire_dtype)
+                    if g.dtype == jnp.float32 else g, grads, plan.params)
             return out, grads
 
     def train_step(state: TrainState, batch: dict):

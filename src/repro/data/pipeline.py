@@ -33,6 +33,16 @@ class Dataset:
     is_encdec: bool = False
     frames_dim: int = 0
     frames_len: int = 0
+    # per-stream skew: the encoder-side src_tokens stream can carry its own
+    # distribution (None = same as zipf_a; 0 = uniform over the vocab, i.e.
+    # a near-dense table) — the two-table per-parameter planning scenario
+    src_zipf_a: Optional[float] = None
+    # workload shift: the first ``burst_steps`` batches draw tokens at
+    # ``burst_zipf_a`` (0 = uniform) before settling to zipf_a — a sustained
+    # high-unique burst that overflows a capped dedupe buffer and exercises
+    # the overflow-driven capacity-growth replan
+    burst_steps: int = 0
+    burst_zipf_a: float = 0.0
 
     @property
     def local_batch(self) -> int:
@@ -47,21 +57,31 @@ class Dataset:
         return np.random.default_rng(
             np.random.SeedSequence([self.seed, step]))
 
-    def _tokens(self, rng, shape) -> np.ndarray:
+    def _tokens(self, rng, shape, a: Optional[float] = None) -> np.ndarray:
+        a = self.zipf_a if a is None else a
+        if a <= 1.0:
+            # a <= 1 has no proper Zipf normalization: uniform ids
+            return rng.integers(0, self.vocab, size=shape, dtype=np.int64) \
+                .astype(np.int32)
         # bounded Zipf: rejection-free via truncated zipf ranks
-        ranks = rng.zipf(self.zipf_a, size=shape)
+        ranks = rng.zipf(a, size=shape)
         return ((ranks - 1) % self.vocab).astype(np.int32)
+
+    def _step_a(self, step: int) -> Optional[float]:
+        if self.burst_steps and step < self.burst_steps:
+            return self.burst_zipf_a
+        return None
 
     def batch(self, step: int) -> dict:
         rng = self._rng(step)
         b, s = self.global_batch, self.seq_len
-        toks = self._tokens(rng, (b, s + 1))
+        toks = self._tokens(rng, (b, s + 1), self._step_a(step))
         out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
         if self.is_encdec and self.frames_dim:
             out["frames"] = rng.standard_normal(
                 (b, self.frames_len, self.frames_dim)).astype(np.float32) * 0.02
         elif self.is_encdec:
-            out["src_tokens"] = self._tokens(rng, (b, s))
+            out["src_tokens"] = self._tokens(rng, (b, s), self.src_zipf_a)
         if self.num_replicas > 1:
             sl = slice(self.replica_id, None, self.num_replicas)
             out = {k: v[sl] for k, v in out.items()}

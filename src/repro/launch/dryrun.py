@@ -163,6 +163,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                  "embed_method": plan.embed_method,
                  "zero_stage": plan.zero_stage,
                  "methods": plan.methods(),
+                 "tables": plan.tables(),
                  "census": plan.census()},
         "roofline": terms.to_dict(),
         "run_cfg": {"comm_mode": run_cfg.comm_mode,

@@ -41,6 +41,23 @@ def _parse():
     ap.add_argument("--plan-zipf", action="store_true",
                     help="let the planner assume the declared --zipf-a skew "
                          "(default: conservative uniform-draw bound)")
+    ap.add_argument("--table-zipf", default="",
+                    help="per-table declared skew for the planner, e.g. "
+                         "'embed=1.3,enc_embed=1.05' (overrides --plan-zipf "
+                         "for the named tables)")
+    ap.add_argument("--capacity-growth", type=float, default=1.5,
+                    help="capacity headroom multiplier applied when a "
+                         "table's overflow EMA triggers a growth replan")
+    ap.add_argument("--overflow-tolerance", type=float, default=0.5,
+                    help="dropped-rows EMA (per table, per step) above "
+                         "which the replan loop grows that table's capacity")
+    ap.add_argument("--wire-auto", action="store_true",
+                    help="profiled per-parameter wire-dtype selection: "
+                         "outlier-prone gradient buckets keep f32 on the "
+                         "wire, the rest ride the wire dtype")
+    ap.add_argument("--wire-outlier-ratio", type=float, default=64.0,
+                    help="per-bucket |g|inf/rms ratio above which --wire-"
+                         "auto pins the bucket's parameters to f32")
     ap.add_argument("--replan-every", type=int, default=0,
                     help="profile->replan period in steps (0 = static plan)")
     ap.add_argument("--replan-warmup", type=int, default=2)
@@ -83,12 +100,20 @@ def main():
     if args.reduced:
         cfg = reduced(cfg)
     shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    table_zipf = tuple(
+        (k, float(v)) for k, v in
+        (kv.split("=", 1) for kv in args.table_zipf.split(",") if kv))
     run_cfg = RunConfig(
         comm_mode=args.comm_mode, local_agg=not args.no_local_agg,
         opau=not args.no_opau, opsw=not args.no_opsw,
         capacity_mode=args.capacity_mode,
         capacity_factor=args.capacity_factor,
+        capacity_growth=args.capacity_growth,
+        overflow_tolerance=args.overflow_tolerance,
         zipf_a=args.zipf_a if args.plan_zipf else None,
+        table_zipf=table_zipf,
+        wire_dtype_auto=args.wire_auto,
+        wire_outlier_ratio=args.wire_outlier_ratio,
         bucket_bytes=args.bucket_bytes, embed_impl=args.embed_impl,
         learning_rate=args.lr, remat=args.remat,
         attention_impl=args.attention, seed=args.seed)
@@ -121,6 +146,10 @@ def main():
             if "observed_alpha" in m:
                 extra = (f"  alpha {m['observed_alpha']:.4f}"
                          f"  replans {int(m.get('replans', 0))}")
+            over = {t: v for t, v in m.get("overflow", {}).items() if v > 0}
+            if over:
+                extra += "  dropped " + ",".join(
+                    f"{t}:{v:.1f}" for t, v in sorted(over.items()))
             print(f"step {step:5d}  loss {m.get('loss', float('nan')):.4f}  "
                   f"{m.get('tokens_per_s', 0):.0f} tok/s  "
                   f"gnorm {m.get('grad_norm', float('nan')):.3f}{extra}")

@@ -93,7 +93,7 @@ def decode_stack(params, tokens, enc_out, *, cfg, rt, cache=None,
     b, s = tokens.shape
     ctx = rt.embed_ctx()
     x, emetrics = emb.lookup(params["embed"], tokens, ctx=ctx,
-                             capacity=rt.embed_capacity)
+                             capacity=rt.embed_capacity_for("embed"))
     x = x.astype(rt.dtype)
     x = rt.constrain(x, rt_residual_axes(rt, x))
     positions = (cache_len if cache_len is not None else 0) + jnp.arange(s)

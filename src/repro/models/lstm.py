@@ -61,9 +61,11 @@ def _lstm_layer(p, xs, state, rt):
     return ys.transpose(1, 0, 2), (c, h)
 
 
-def _init_state(cfg, batch, n_layers):
+def _init_state(cfg, batch, n_layers, dtype=jnp.bfloat16):
+    # cell state c stays f32 (the accumulator); the projected h matches the
+    # activation dtype so the scan carry round-trips under any compute dtype
     return (jnp.zeros((n_layers, batch, cfg.d_ff), jnp.float32),
-            jnp.zeros((n_layers, batch, cfg.d_model), jnp.bfloat16))
+            jnp.zeros((n_layers, batch, cfg.d_model), dtype))
 
 
 def _run_stack(layers_p, x, states, rt):
@@ -82,21 +84,22 @@ def _run_stack(layers_p, x, states, rt):
 def forward(params, batch, *, cfg, rt, state=None):
     tokens = batch["tokens"]
     b, s = tokens.shape
-    ctx = rt.embed_ctx()
-    x, metrics = emb.lookup(params["embed"], tokens, ctx=ctx,
-                            capacity=rt.embed_capacity)
+    x, metrics = emb.lookup(params["embed"], tokens, ctx=rt.embed_ctx(),
+                            capacity=rt.embed_capacity_for("embed"))
     x = x.astype(rt.dtype)
     if state is None:
-        state = _init_state(cfg, b, cfg.n_layers)
+        state = _init_state(cfg, b, cfg.n_layers, rt.dtype)
     if cfg.is_encdec:
+        # each table runs its *own* planned exchange (method/capacity/wire
+        # dtype can differ) and reports its own census metrics
         src, m2 = emb.lookup(params["enc_embed"], batch["src_tokens"],
-                             ctx=ctx, capacity=rt.embed_capacity)
+                             ctx=rt.embed_ctx("enc_embed"),
+                             capacity=rt.embed_capacity_for("enc_embed"),
+                             name="enc_embed")
         enc_out, _ = _run_stack(params["enc_layers"], src.astype(rt.dtype),
-                                _init_state(cfg, b, cfg.enc_layers), rt)
-        # counts add across tables; the unique census keeps the binding
-        # (largest) table — capacity is provisioned per table, not summed
-        metrics = {k: (jnp.maximum(metrics[k], m2[k]) if k.endswith("_unique")
-                       else metrics[k] + m2[k]) for k in metrics}
+                                _init_state(cfg, b, cfg.enc_layers, rt.dtype),
+                                rt)
+        metrics.update(m2)
     x, new_state = _run_stack(params["layers"], x, state, rt)
     if cfg.is_encdec:
         # GNMT-lite dot attention over encoder states

@@ -260,7 +260,7 @@ def forward(params, tokens, *, cfg, rt, cache=None, cache_len=None,
     b, s = tokens.shape
     ctx = rt.embed_ctx()
     x, emetrics = emb.lookup(params["embed"], tokens, ctx=ctx,
-                             capacity=rt.embed_capacity)
+                             capacity=rt.embed_capacity_for("embed"))
     x = x.astype(rt.dtype)
     if embeds is not None:
         x = x + embeds.astype(rt.dtype)

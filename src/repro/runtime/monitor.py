@@ -32,6 +32,8 @@ class StepMonitor:
     replans: int = 0                         # plan hot-swaps so far
     exchange: Optional[dict] = None          # bucketed-exchange accounting
                                              # (core/buckets.py stats)
+    overflow: Optional[dict] = None          # per-table embed_dropped EMA
+                                             # (rows silently zeroed / step)
 
     def start(self):
         self._last = time.perf_counter()
@@ -41,6 +43,13 @@ class StepMonitor:
 
     def note_replan(self):
         self.replans += 1
+
+    def note_overflow(self, dropped: dict):
+        """Record the per-table overflow EMA ({table: dropped rows/step}) —
+        visible in stats before the capacity-growth replan fires, and its
+        decay back to ~0 is the growth loop's success signal."""
+        self.overflow = {k: float(v) for k, v in dropped.items()} \
+            if dropped else None
 
     def note_exchange(self, stats: Optional[dict]):
         """Record the live plan's dense-exchange shape: bucket count, fused
@@ -66,6 +75,11 @@ class StepMonitor:
         }
         if self.observed_alpha is not None:
             stats["observed_alpha"] = self.observed_alpha
+        if self.overflow is not None:
+            # per-table {table: dropped-rows EMA}; scalar max under its own
+            # key so it can't shadow the raw per-step embed_dropped metric
+            stats["overflow"] = dict(self.overflow)
+            stats["overflow_rows"] = max(self.overflow.values(), default=0.0)
         if self.exchange is not None:
             stats["n_collectives"] = self.exchange["n_collectives_dense"]
             stats["exchange"] = self.exchange

@@ -35,9 +35,10 @@ from repro import compat
 from repro.checkpoint.ckpt import (AsyncCheckpointer, latest_step,
                                    restore_checkpoint)
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
-from repro.core.plan import plan_diff
+from repro.core.plan import plan_diff, plan_leaves
 from repro.core.runtime import Runtime
-from repro.core.sparsity import SparsityProfile, observed_census
+from repro.core.sparsity import (SparsityProfile, observed_census,
+                                 wire_dtype_hints)
 from repro.core.transform import (analyze, apply_replan, build_step,
                                   estimate_census)
 from repro.data.pipeline import Dataset
@@ -46,6 +47,15 @@ from repro.optim.optimizer import make_optimizer
 from repro.runtime.monitor import StepMonitor
 
 log = logging.getLogger("repro.trainer")
+
+
+def _bucket_signature(plan) -> tuple:
+    """The identity of a plan's bucket layout: per-bucket member indices and
+    wire dtype, in order. Index-keyed gbucket EMAs are only comparable
+    between plans with equal signatures."""
+    if plan.bucket_plan is None:
+        return ()
+    return tuple((b.idx, b.key[1]) for b in plan.bucket_plan.buckets)
 
 
 @dataclass
@@ -120,29 +130,51 @@ class Trainer:
     def maybe_replan(self) -> Optional[dict]:
         """Re-run the planner on the observed census; hot-swap on change.
 
-        Returns the plan diff when a replan was evaluated, None when the
-        profile has no data yet. Reuses the remesh reshard path only when
-        pspecs actually moved; otherwise state stays put and just the
-        jitted step is rebuilt against the new plan.
+        Per-parameter: the census carries one record per sparse table
+        (measured unique rows, overflow EMA, overflow-grown capacity) plus
+        profiled wire-dtype hints from the dense-gradient magnitude census,
+        so each table / bucket group can move independently. Returns the
+        plan diff when a replan was evaluated, None when the profile has no
+        data yet. Reuses the remesh reshard path only when pspecs actually
+        moved; otherwise state stays put and just the jitted step is
+        rebuilt against the new plan.
         """
         if not self.profile.ready(self.tcfg.replan_warmup):
             return None
         base = estimate_census(self.model, self.rt)
+        live = {n: (self.plan.table_capacity.get(n, 0),
+                    n in self.plan.grown_tables)
+                for n in self.plan.table_methods}
         census = observed_census(self.profile, base,
-                                 self.model_cfg.vocab_size, self.run_cfg)
+                                 self.model_cfg.vocab_size, self.run_cfg,
+                                 live=live)
+        if self.run_cfg.wire_dtype_auto and self.plan.bucket_plan is not None:
+            names = [p.name for p in plan_leaves(self.plan.params)]
+            census.wire_dtypes = wire_dtype_hints(
+                self.profile, self.plan.bucket_plan, names,
+                outlier_ratio=self.run_cfg.wire_outlier_ratio,
+                default=self.run_cfg.wire_dtype)
         new_plan = analyze(self.model, self.rt, census=census)
         diff = plan_diff(self.plan, new_plan, self.tcfg.replan_drift)
         self.monitor.note_alpha(census.alpha)
         if not diff["changed"]:
             return diff
         log.info(
-            "replan at step %d: alpha %.4f -> %.4f, capacity %d -> %d, "
-            "flips=%s, pspecs_changed=%s", self.step, diff["alpha"][0],
+            "replan at step %d: alpha %.4f -> %.4f, capacity %d -> %d "
+            "(tables %s -> %s%s), flips=%s, wire_flips=%s, "
+            "pspecs_changed=%s", self.step, diff["alpha"][0],
             diff["alpha"][1], diff["capacity"][0], diff["capacity"][1],
-            diff["flips"], diff["pspecs_changed"])
+            diff["table_capacity"][0], diff["table_capacity"][1],
+            ", overflow-grown" if diff["capacity_grown"] else "",
+            diff["flips"], diff["wire_flips"], diff["pspecs_changed"])
+        old_sig = _bucket_signature(self.plan)
         self.plan = new_plan
         self.train_step, self.state, self.shardings = apply_replan(
             self.model, self.optimizer, self.rt, new_plan, self.state, diff)
+        if _bucket_signature(new_plan) != old_sig:
+            # bucket metrics are index-keyed: a regrouped layout makes the
+            # old per-bucket magnitude EMAs mis-attributed — start fresh
+            self.profile.reset_grad_census()
         self.monitor.note_replan()
         self.monitor.note_exchange(
             new_plan.bucket_plan.stats() if new_plan.bucket_plan else None)
@@ -161,6 +193,12 @@ class Trainer:
                     metrics = {k: float(v) for k, v in metrics.items()
                                if getattr(v, "ndim", 0) == 0}
                     self.profile.update(metrics)
+                    # overflow is visible host-side every profiled step, not
+                    # just when (or if) the growth replan fires; restricted
+                    # to real sparse tables (the MoE router also emits a
+                    # *_dropped scalar that is not buffer overflow)
+                    self.monitor.note_overflow(
+                        self.profile.dropped(self.plan.table_methods))
                 retries = 0
             except Exception as e:  # failure path: restore + retry
                 retries += 1

@@ -8,8 +8,10 @@ import jax
 import numpy as np
 
 
-def _path_name(path) -> str:
-    """Render a jax tree path as a dotted parameter name."""
+def path_name(path) -> str:
+    """Render a jax tree path as a dotted parameter name — THE name under
+    which a parameter is known everywhere (ParamPlan.name, Census.tables
+    keys, RunConfig.table_zipf/table_alpha, census metric prefixes)."""
     parts = []
     for p in path:
         if isinstance(p, jax.tree_util.DictKey):
@@ -26,7 +28,7 @@ def _path_name(path) -> str:
 def tree_map_with_path_names(fn: Callable[[str, Any], Any], tree: Any) -> Any:
     """tree_map where fn receives (dotted_name, leaf)."""
     return jax.tree_util.tree_map_with_path(
-        lambda path, leaf: fn(_path_name(path), leaf), tree
+        lambda path, leaf: fn(path_name(path), leaf), tree
     )
 
 
@@ -34,7 +36,7 @@ def named_leaves(tree: Any) -> list[tuple[str, Any]]:
     """[(dotted_name, leaf)] for every leaf of the tree."""
     out: list[tuple[str, Any]] = []
     jax.tree_util.tree_map_with_path(
-        lambda path, leaf: out.append((_path_name(path), leaf)), tree
+        lambda path, leaf: out.append((path_name(path), leaf)), tree
     )
     return out
 

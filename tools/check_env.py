@@ -38,9 +38,25 @@ def collect() -> dict:
             name: importlib.util.find_spec(name) is not None
             for name in OPTIONAL_DEPS
         },
+        "embed_impl_pallas": _probe_pallas(),
     }
     report["ok"] = bool(report["jax"]["supported"])
     return report
+
+
+def _probe_pallas() -> dict:
+    """Can RunConfig.embed_impl='pallas' serve the sparse hot path here?
+    Off-TPU the kernels run in interpret mode — available but slow."""
+    import jax
+    try:
+        import numpy as np
+        from repro.kernels import ops
+        out = ops.embed_gather(np.zeros((8, 4), np.float32),
+                               np.zeros((4,), np.int32))
+        return {"available": bool(np.asarray(out).shape == (4, 4)),
+                "interpret_mode": jax.default_backend() != "tpu"}
+    except Exception as e:  # pallas import / lowering failure
+        return {"available": False, "error": f"{type(e).__name__}: {e}"}
 
 
 def main() -> int:
@@ -69,6 +85,14 @@ def main() -> int:
           + "  ".join([f"{k}=yes" for k in present]
                       + [f"{k}=no (tests fall back to tests/_prop.py shim)"
                          for k in missing]))
+    pal = report["embed_impl_pallas"]
+    if pal.get("available"):
+        mode = "interpret mode (off-TPU)" if pal.get("interpret_mode") \
+            else "compiled (TPU)"
+        print(f"embed_impl=pallas: available, {mode}")
+    else:
+        print("embed_impl=pallas: UNAVAILABLE "
+              f"({pal.get('error', 'unknown')}) — use embed_impl=jnp")
     print("PASS" if report["ok"] else
           "WARN: JAX older than the supported range — tier-1 results are "
           "not meaningful")
