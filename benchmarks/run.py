@@ -13,7 +13,7 @@ import sys
 def main() -> None:
     which = set(sys.argv[1:]) or {"table1", "table3", "table4", "fig13",
                                   "roofline", "kernels", "adaptive",
-                                  "buckets"}
+                                  "buckets", "elastic"}
     if "table1" in which:
         from benchmarks import table1_census
         table1_census.main()
@@ -38,6 +38,9 @@ def main() -> None:
     if "buckets" in which:
         from benchmarks import bucket_exchange
         bucket_exchange.main()
+    if "elastic" in which:
+        from benchmarks import elastic_remesh
+        elastic_remesh.main()
 
 
 if __name__ == "__main__":

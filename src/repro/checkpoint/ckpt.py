@@ -1,11 +1,11 @@
 """Fault-tolerant sharded checkpointing.
 
-Layout (one directory per step):
+Layout (one directory per step, step_%08d names):
     ckpt_dir/
-      step_000100.tmp/          # written first
+      step_00000100.tmp/        # written first
         manifest.json           # tree structure, shapes, dtypes, shard map
         shard_<host>_<i>.npz    # one file per (host, leaf-group)
-      step_000100/              # atomic rename commits the checkpoint
+      step_00000100/            # atomic rename commits the checkpoint
 
 Guarantees:
   * atomicity — readers only ever see fully-written checkpoints (tmp dir is
@@ -23,7 +23,9 @@ single-process repro host == process 0 holds everything.
 from __future__ import annotations
 
 import json
+import logging
 import os
+import re
 import shutil
 import threading
 import time
@@ -34,6 +36,8 @@ import ml_dtypes  # numpy extension dtypes (bfloat16 etc.)
 import numpy as np
 
 from repro.utils.tree import named_leaves
+
+log = logging.getLogger("repro.ckpt")
 
 # np.savez cannot store ml_dtypes (bfloat16 -> void); store a bit-view and
 # record the logical dtype in the manifest.
@@ -84,12 +88,30 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any,
     return final
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+_STEP_DIR = re.compile(r"^step_(\d{8,})$")   # the step_%08d writer's names
+
+
+def _committed_steps(ckpt_dir: str) -> list[int]:
+    """Step numbers of committed checkpoints under ``ckpt_dir``, ignoring
+    anything this writer could not have produced: stray files users drop
+    next to checkpoints (logs, notes, 'latest' symlinks), in-flight
+    ``.tmp`` dirs, and unpadded ``step_7``-style names (the read/delete
+    paths open ``step_%08d``, so counting those would turn a stray into a
+    crash or a mis-aimed GC) — all used to crash the int() parse of the
+    whole directory."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+        return []
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = _STEP_DIR.match(d)
+        if m:
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = _committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def restore_checkpoint(ckpt_dir: str, state_like: Any,
@@ -128,11 +150,7 @@ def restore_checkpoint(ckpt_dir: str, state_like: Any,
 
 
 def gc_checkpoints(ckpt_dir: str, keep: int = 3) -> None:
-    if not os.path.isdir(ckpt_dir):
-        return
-    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-                   if d.startswith("step_") and not d.endswith(".tmp"))
-    for s in steps[:-keep]:
+    for s in _committed_steps(ckpt_dir)[:-keep]:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
                       ignore_errors=True)
 
@@ -147,6 +165,14 @@ class AsyncCheckpointer:
         self.last_committed: Optional[int] = None
         self._error: Optional[BaseException] = None
 
+    @property
+    def error(self) -> Optional[BaseException]:
+        """The last background-write failure, without consuming it — lets
+        the monitor surface a failing checkpoint path in the per-step stats
+        instead of only on the next ``wait()`` (which may be ckpt_every
+        steps after the bytes stopped reaching disk)."""
+        return self._error
+
     def wait(self):
         if self._thread is not None:
             self._thread.join()
@@ -154,6 +180,25 @@ class AsyncCheckpointer:
         if self._error is not None:
             err, self._error = self._error, None
             raise err
+
+    def save_sync(self, step: int, state: Any,
+                  extra: Optional[dict] = None) -> None:
+        """Synchronous commit on the caller thread — the pre-remesh safety
+        checkpoint: wait out any in-flight write, write + GC, record the
+        commit. Same retention protocol as the async path, one home.
+
+        A *stale* background failure is logged and discarded rather than
+        re-raised: it must not block the fresh commit this call exists to
+        make (the caller wants a checkpoint of the state it holds *now*;
+        only a failure of that fresh write propagates)."""
+        try:
+            self.wait()
+        except Exception:
+            log.exception("discarding stale async checkpoint failure "
+                          "before synchronous save of step %d", step)
+        save_checkpoint(self.ckpt_dir, step, state, extra)
+        gc_checkpoints(self.ckpt_dir, self.keep)
+        self.last_committed = step
 
     def save(self, step: int, state: Any, extra: Optional[dict] = None):
         self.wait()

@@ -168,6 +168,11 @@ class Plan:
     table_methods: dict = field(default_factory=dict)   # name -> method
     table_capacity: dict = field(default_factory=dict)  # name -> buffer rows
     table_wire: dict = field(default_factory=dict)      # name -> jnp dtype
+    table_alpha: dict = field(default_factory=dict)     # name -> priced α
+                                       # (the activated fraction the Table-3
+                                       # argmin ran at — recorded so a
+                                       # checkpoint manifest can reproduce
+                                       # the method choice on restore)
     grown_tables: tuple = ()           # tables whose capacity the overflow
                                        # rule grew in this plan's census
 
@@ -189,13 +194,18 @@ class Plan:
 
     def tables(self) -> dict:
         """Per-sparse-table plan summary (JSON-friendly) — one entry per
-        table: its exchange method, buffer capacity, and wire dtype."""
+        table: its exchange method, buffer capacity, wire dtype, and the α
+        the cost model priced it at. The summary round-trips through the
+        checkpoint manifest (``Trainer`` saves it in ``extra['plan']``) and
+        is enough to re-derive the same plan on restore: capacities and
+        grown flags override the census, α reproduces the method argmin."""
         return {t: {
             "method": m,
             "capacity": self.table_capacity.get(t, self.capacity),
             "wire_dtype": jnp.dtype(self.table_wire[t]).name
             if t in self.table_wire else None,
             "grown": t in self.grown_tables,
+            "alpha": self.table_alpha.get(t),
         } for t, m in self.table_methods.items()}
 
 
@@ -211,9 +221,12 @@ def plan_diff(old: Plan, new: Plan, capacity_drift: float = 1.5) -> dict:
     ``changed`` is True when any parameter's exchange method flips, any
     pspec/opt_pspec differs (state must reshard), any parameter's wire dtype
     moves (the jitted step must re-trace), any table's capacity drifts by
-    more than ``capacity_drift``x in either direction, or the overflow rule
+    more than ``capacity_drift``x in either direction, the overflow rule
     grew a table's capacity (growth is never deadbanded — sustained overflow
-    means rows are being silently zeroed under the live plan).
+    means rows are being silently zeroed under the live plan), or the plans
+    price *different world sizes* (``mesh_changed`` — the elastic remesh
+    path: the cost model's α·messages term depends on N, so a plan diffed
+    across meshes always warrants a rebuild even if every method held).
     """
     leaf = lambda x: isinstance(x, ParamPlan)
     olds = {p.name: p for p in jax.tree.leaves(old.params, is_leaf=leaf)}
@@ -239,9 +252,13 @@ def plan_diff(old: Plan, new: Plan, capacity_drift: float = 1.5) -> dict:
     capacity_grown = any(
         new.table_capacity.get(t, 0) > old.table_capacity.get(t, 0)
         for t in new.grown_tables)
+    mesh_shape = lambda p: dict(p.mesh.shape) if p.mesh is not None else None
+    mesh_changed = mesh_shape(old) != mesh_shape(new)
     return {
         "changed": bool(flips) or bool(wire_flips) or pspecs_changed
-                   or capacity_drifted or capacity_grown,
+                   or capacity_drifted or capacity_grown or mesh_changed,
+        "mesh_changed": mesh_changed,
+        "mesh": (mesh_shape(old), mesh_shape(new)),
         "rebuilt": False,             # set by the caller that acts on the diff
         "flips": flips,
         "wire_flips": wire_flips,

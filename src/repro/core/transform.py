@@ -92,6 +92,7 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
     table_methods: dict[str, str] = {}
     table_capacity: dict[str, int] = {}
     table_wire: dict[str, Any] = {}
+    table_alpha: dict[str, float] = {}
 
     def _wire_for(name: str):
         """OPSW wire dtype for one parameter: the census's profiled hint
@@ -119,6 +120,7 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
             table_methods[name] = method if rt.mesh is not None else "dense"
             table_capacity[name] = capacity
             table_wire[name] = wire
+            table_alpha[name] = float(alpha)
             if method in ("mpi_gatherv", "allreduce"):
                 # table replicated (paper's MPI baseline / dense-AR pick)
                 pspec = P(*([None] * len(spec.shape)))
@@ -144,7 +146,7 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
                 params=plans, alpha=census.alpha, capacity=census.capacity,
                 zero_stage=rt.run_cfg.zero_stage, embed_method=embed_method,
                 table_methods=table_methods, table_capacity=table_capacity,
-                table_wire=table_wire,
+                table_wire=table_wire, table_alpha=table_alpha,
                 grown_tables=tuple(sorted(
                     n for n, t in census.tables.items() if t.grown)))
 

@@ -1,4 +1,4 @@
-"""Production mesh builders.
+"""Production mesh builders + the elastic shrink helper.
 
 Defined as FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state — smoke tests keep their single device.
@@ -7,6 +7,11 @@ supported JAX (see src/repro/compat/).
 """
 from __future__ import annotations
 
+from typing import Optional
+
+import numpy as np
+
+from repro.compat import Mesh
 from repro.compat import make_mesh as _compat_make_mesh
 
 
@@ -20,3 +25,41 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape: tuple, axes: tuple):
     """Arbitrary mesh with Auto axis types (tests / examples)."""
     return _compat_make_mesh(shape, axes)
+
+
+def shrink_mesh(mesh: Optional[Mesh], drop_axis_index: int,
+                axis: str = "data", min_axis_size: int = 1) -> Optional[Mesh]:
+    """Rebuild ``mesh`` without one slice along ``axis`` — the elastic
+    straggler-eviction path: dropping index ``drop_axis_index`` along the
+    data axis evicts that slice's devices (the suspected-slow host) and the
+    remaining device grid becomes a mesh with the same axis names.
+
+    Returns ``None`` when the mesh cannot shrink: no mesh, the axis is
+    absent, or shrinking would take it below ``min_axis_size`` (the
+    trainer's ``min_data_parallel`` floor). Raises on an out-of-range index
+    — the caller named a slice that does not exist.
+
+    The surviving devices keep their grid positions (no re-layout), so
+    every other slice's placement is stable across the shrink — only the
+    evicted slice's shards move, through the elastic state reshard.
+    """
+    if mesh is None or axis not in mesh.axis_names:
+        return None
+    ax = mesh.axis_names.index(axis)
+    devices = np.asarray(mesh.devices)
+    size = devices.shape[ax]
+    if not 0 <= drop_axis_index < size:
+        raise ValueError(
+            f"drop_axis_index {drop_axis_index} out of range for "
+            f"{axis}={size}")
+    if size <= 1 or size - 1 < min_axis_size:
+        return None
+    kept = np.delete(devices, drop_axis_index, axis=ax)
+    # the Mesh constructor (via repro.compat) takes the device grid as-is —
+    # no re-layout, unlike the make_mesh convenience path. Axis types carry
+    # over where the installed JAX has them (pre-AxisType JAX has neither
+    # the attribute nor the kwarg, and Auto is its only behavior)
+    axis_types = getattr(mesh, "axis_types", None)
+    if axis_types is not None:
+        return Mesh(kept, mesh.axis_names, axis_types=axis_types)
+    return Mesh(kept, mesh.axis_names)

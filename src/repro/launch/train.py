@@ -64,6 +64,16 @@ def _parse():
     ap.add_argument("--replan-drift", type=float, default=1.5,
                     help="capacity drift factor that triggers a replan")
     ap.add_argument("--profile-decay", type=float, default=0.9)
+    ap.add_argument("--remesh-on-straggle", action="store_true",
+                    help="elastic straggler response: on a sustained step-"
+                         "time regression, checkpoint, drop the slow data "
+                         "slice, re-price the plan for the smaller world, "
+                         "and resume on the live state")
+    ap.add_argument("--remesh-cooldown", type=int, default=50,
+                    help="steps after an auto-remesh before the monitor "
+                         "may escalate again (anti-thrash)")
+    ap.add_argument("--min-data-parallel", type=int, default=1,
+                    help="never shrink the data axis below this many slices")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -133,7 +143,10 @@ def main():
                          replan_every=args.replan_every,
                          replan_warmup=args.replan_warmup,
                          replan_drift=args.replan_drift,
-                         profile_decay=args.profile_decay)
+                         profile_decay=args.profile_decay,
+                         remesh_on_straggle=args.remesh_on_straggle,
+                         remesh_cooldown=args.remesh_cooldown,
+                         min_data_parallel=args.min_data_parallel)
     trainer = Trainer(cfg, shape, run_cfg, tcfg, ds, mesh=mesh)
     trainer.maybe_restore()
 
@@ -150,6 +163,10 @@ def main():
             if over:
                 extra += "  dropped " + ",".join(
                     f"{t}:{v:.1f}" for t, v in sorted(over.items()))
+            if m.get("remeshes"):
+                extra += f"  remeshes {int(m['remeshes'])}"
+            if "ckpt_error" in m:
+                extra += f"  CKPT-ERROR {m['ckpt_error']}"
             print(f"step {step:5d}  loss {m.get('loss', float('nan')):.4f}  "
                   f"{m.get('tokens_per_s', 0):.0f} tok/s  "
                   f"gnorm {m.get('grad_norm', float('nan')):.3f}{extra}")

@@ -1,14 +1,24 @@
-"""Step-time monitoring: throughput accounting + straggler detection.
+"""Step-time monitoring: throughput accounting + straggler escalation.
 
 In synchronous data-parallel training a straggling host slows every step
 (the collective waits). Without per-host timers (single-controller here),
 stragglers manifest as step-time outliers; the monitor flags sustained
-regressions so the driver loop can act (checkpoint + re-mesh without the
-slow host = the elastic restart path in trainer.py).
+regressions and — once the run is past ``sustained`` consecutive outliers
+and outside the post-remesh ``cooldown`` — *escalates* to
+``remesh_suggested``, the signal the trainer's auto-remesh path acts on
+(checkpoint + re-mesh without the slow slice, runtime/trainer.py).
+
+Recovery awareness: restore/rebuild pauses (``note_recovery``) drop the
+in-flight timing sample and the outlier run so recovery latency never reads
+as a straggler, and a landed remesh (``note_remesh``) clears the whole
+timing window — the new world size is a different step-time regime, and
+comparing it against old-mesh medians would instantly re-trigger.
 
 The monitor also carries the adaptive-replanning telemetry: the trainer
 reports the observed sparsity α (from the SparsityProfile EMA) and every
-plan hot-swap, and both show up in the per-step stats dict.
+plan hot-swap, and both show up in the per-step stats dict — as does any
+error the async checkpointer hit in the background (``note_ckpt_error``),
+so a failing checkpoint path is visible *now*, not on the next ``wait()``.
 """
 from __future__ import annotations
 
@@ -23,13 +33,19 @@ class StepMonitor:
     window: int = 50
     straggler_factor: float = 2.0     # step > factor x median => outlier
     sustained: int = 5                # consecutive outliers => straggler
+    min_samples: int = 10             # window fill before outlier detection
+    cooldown: int = 0                 # steps after a remesh before the
+                                      # monitor may suggest another (0 = none)
     times: collections.deque = field(default_factory=collections.deque)
-    _last: float = 0.0
+    _last: Optional[float] = None     # start() timestamp; None = no sample
     _outlier_run: int = 0
     total_steps: int = 0
     total_tokens: int = 0
     observed_alpha: Optional[float] = None   # latest measured sparse α
     replans: int = 0                         # plan hot-swaps so far
+    remeshes: int = 0                        # elastic mesh shrinks so far
+    _last_remesh_step: Optional[int] = None  # total_steps at the last remesh
+    ckpt_error: Optional[str] = None         # background checkpoint failure
     exchange: Optional[dict] = None          # bucketed-exchange accounting
                                              # (core/buckets.py stats)
     overflow: Optional[dict] = None          # per-table embed_dropped EMA
@@ -44,6 +60,30 @@ class StepMonitor:
     def note_replan(self):
         self.replans += 1
 
+    def note_remesh(self):
+        """An elastic remesh landed: count it, arm the cooldown, and clear
+        the timing window + outlier run — step times on the shrunken mesh
+        are a different regime, and old-mesh medians would mis-attribute
+        the first post-remesh (recompile) steps as fresh outliers."""
+        self.remeshes += 1
+        self._last_remesh_step = self.total_steps
+        self.times.clear()
+        self._outlier_run = 0
+
+    def note_recovery(self):
+        """A restore/rebuild pause happened (checkpoint restore, failed-step
+        retry): drop the in-flight timing sample and reset the outlier run
+        so recovery latency doesn't count toward the straggler escalation."""
+        self._outlier_run = 0
+        self._last = None
+
+    def note_ckpt_error(self, err: Optional[BaseException]):
+        """Surface a background checkpoint failure in the per-step stats
+        (previously only raised on the *next* wait(), i.e. up to ckpt_every
+        steps after the bytes stopped reaching disk)."""
+        self.ckpt_error = None if err is None else \
+            f"{type(err).__name__}: {err}"
+
     def note_overflow(self, dropped: dict):
         """Record the per-table overflow EMA ({table: dropped rows/step}) —
         visible in stats before the capacity-growth replan fires, and its
@@ -57,24 +97,36 @@ class StepMonitor:
         self.exchange = dict(stats) if stats else None
 
     def stop(self, tokens: int = 0) -> dict:
-        dt = time.perf_counter() - self._last
-        self.times.append(dt)
-        if len(self.times) > self.window:
-            self.times.popleft()
+        # a cleared _last means note_recovery dropped the in-flight sample
+        # (the pause spans a restore, not a training step): keep the
+        # throughput accounting but record no timing sample for it
+        dt = time.perf_counter() - self._last if self._last is not None \
+            else None
+        self._last = None
+        if dt is not None:
+            self.times.append(dt)
+            if len(self.times) > self.window:
+                self.times.popleft()
         self.total_steps += 1
         self.total_tokens += tokens
         med = self.median()
-        is_outlier = len(self.times) >= 10 and dt > self.straggler_factor * med
+        is_outlier = dt is not None and len(self.times) >= self.min_samples \
+            and dt > self.straggler_factor * med
         self._outlier_run = self._outlier_run + 1 if is_outlier else 0
+        dt = dt or 0.0
         stats = {
             "step_time_s": dt,
             "median_s": med,
             "tokens_per_s": tokens / dt if dt > 0 else 0.0,
             "straggler_suspected": self.straggler_suspected,
+            "remesh_suggested": self.remesh_suggested,
             "replans": self.replans,
+            "remeshes": self.remeshes,
         }
         if self.observed_alpha is not None:
             stats["observed_alpha"] = self.observed_alpha
+        if self.ckpt_error is not None:
+            stats["ckpt_error"] = self.ckpt_error
         if self.overflow is not None:
             # per-table {table: dropped-rows EMA}; scalar max under its own
             # key so it can't shadow the raw per-step embed_dropped metric
@@ -89,8 +141,23 @@ class StepMonitor:
         if not self.times:
             return 0.0
         s = sorted(self.times)
-        return s[len(s) // 2]
+        n = len(s)
+        if n % 2:
+            return s[n // 2]
+        return 0.5 * (s[n // 2 - 1] + s[n // 2])
 
     @property
     def straggler_suspected(self) -> bool:
         return self._outlier_run >= self.sustained
+
+    @property
+    def remesh_suggested(self) -> bool:
+        """Escalation: a sustained outlier run outside the remesh cooldown.
+        The trainer pairs this signal with a concrete shrink proposal
+        (launch/mesh.shrink_mesh) before acting."""
+        if not self.straggler_suspected:
+            return False
+        if self.cooldown and self._last_remesh_step is not None and \
+                self.total_steps - self._last_remesh_step < self.cooldown:
+            return False
+        return True

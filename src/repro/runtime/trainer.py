@@ -10,6 +10,15 @@ Responsibilities beyond the jitted step:
     a different mesh and reshards the live state through the elastic
     checkpoint path (the node-failure story: drop the bad host's slice,
     re-mesh, resume);
+  * automatic straggler response — with ``remesh_on_straggle`` the monitor's
+    sustained-outlier escalation drives the loop itself: commit a
+    checkpoint, shrink the data axis by one slice
+    (``launch/mesh.shrink_mesh``), re-run ``analyze()`` so every method /
+    capacity / bucket is re-priced for the smaller world (the cost model's
+    α·messages term changes with N), and resume on the live state with
+    trajectory continuity. ``remesh_cooldown`` steps must pass before the
+    monitor may escalate again, and ``min_data_parallel`` floors the
+    shrink;
   * adaptive replanning — with ``replan_every > 0`` the driver feeds the
     in-graph sparsity census (``embed_unique`` metrics) into a
     ``SparsityProfile`` EMA and periodically re-runs the planner on the
@@ -22,6 +31,7 @@ Responsibilities beyond the jitted step:
 """
 from __future__ import annotations
 
+import dataclasses
 import logging
 import math
 import time
@@ -29,6 +39,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
@@ -42,6 +53,7 @@ from repro.core.sparsity import (SparsityProfile, observed_census,
 from repro.core.transform import (analyze, apply_replan, build_step,
                                   estimate_census)
 from repro.data.pipeline import Dataset
+from repro.launch.mesh import shrink_mesh
 from repro.models.model import build_model
 from repro.optim.optimizer import make_optimizer
 from repro.runtime.monitor import StepMonitor
@@ -72,6 +84,10 @@ class TrainerConfig:
     replan_warmup: int = 2         # min profiled steps before first replan
     replan_drift: float = 1.5      # capacity drift factor that triggers it
     profile_decay: float = 0.9     # EMA decay of the sparsity profile
+    # ---- elastic straggler response (auto-remesh) ----
+    remesh_on_straggle: bool = False  # act on the monitor's escalation
+    remesh_cooldown: int = 50      # steps before the monitor may re-escalate
+    min_data_parallel: int = 1     # never shrink the data axis below this
 
 
 class Trainer:
@@ -81,7 +97,7 @@ class Trainer:
         self.model_cfg, self.shape_cfg = model_cfg, shape_cfg
         self.run_cfg, self.tcfg = run_cfg, tcfg
         self.dataset = dataset
-        self.monitor = StepMonitor()
+        self.monitor = StepMonitor(cooldown=tcfg.remesh_cooldown)
         self.ckpt = AsyncCheckpointer(tcfg.ckpt_dir, tcfg.keep_ckpts) \
             if tcfg.ckpt_dir else None
         self.step = 0
@@ -90,14 +106,25 @@ class Trainer:
         self._build(mesh)
 
     # ------------------------------------------------------------------
-    def _build(self, mesh, state=None):
+    def _build(self, mesh, state=None, carry_plan=None):
         """(Re)build plan + jitted step; ``state`` (host or device arrays)
-        is resharded onto the new plan instead of re-initializing."""
+        is resharded onto the new plan instead of re-initializing.
+
+        ``carry_plan`` (the plan live before an elastic rebuild) carries
+        the *observed* workload knowledge across the mesh change: the new
+        plan is derived from the profile's observed census with sticky
+        growth against the old plan, not from the bare build-time estimate
+        — otherwise a remesh silently reverts overflow-grown capacities
+        and profiled method/wire choices (the same bug class the restore
+        path fixes via the manifest plan record)."""
         self.mesh = mesh
         self.rt = Runtime(self.model_cfg, self.run_cfg, self.shape_cfg,
                           mesh=mesh)
         self.model = build_model(self.model_cfg, self.rt)
-        self.plan = analyze(self.model, self.rt)
+        census = None
+        if carry_plan is not None and self.profile.ready():
+            census = self._observed_census(carry_plan)
+        self.plan = analyze(self.model, self.rt, census=census)
         self.rt.plan = self.plan
         self.optimizer = make_optimizer(self.rt)
         self.train_step, self.state, self.shardings = build_step(
@@ -107,6 +134,33 @@ class Trainer:
             self.plan.bucket_plan.stats() if self.plan.bucket_plan else None)
 
     # ------------------------------------------------------------------
+    def _wire_pins(self, plan) -> dict:
+        """Dense parameters whose planned wire dtype differs from the
+        global knob — i.e. the profiled wire_dtype_auto pins. Part of the
+        manifest plan record: Plan.tables() only covers sparse tables, so
+        without this a restored run would silently revert an outlier-prone
+        bucket's f32 pin to the bf16 default."""
+        base = jnp.dtype(self.rt.wire_dtype)
+        return {p.name: jnp.dtype(p.wire_dtype).name
+                for p in plan_leaves(plan.params)
+                if not p.sparse and jnp.dtype(p.wire_dtype) != base}
+
+    def _ckpt_extra(self) -> dict:
+        """Manifest ``extra`` for every checkpoint this trainer writes: the
+        dataset cursor plus the live plan's per-table summary — capacities,
+        methods, wire dtypes, and the priced α — and the dense wire-dtype
+        pins, so a restore can rebuild the *saved* plan instead of silently
+        re-deriving the build-time estimate (which loses overflow-grown
+        capacities and profiled method/wire flips, corrupting the resumed
+        trajectory)."""
+        extra = {"dataset_step": self.step, "plan": self.plan.tables()}
+        pins = self._wire_pins(self.plan)
+        if pins:
+            extra["wire_pins"] = pins
+        if self.mesh is not None:
+            extra["mesh"] = dict(self.mesh.shape)
+        return extra
+
     def maybe_restore(self):
         if self.ckpt is None:
             return
@@ -115,16 +169,144 @@ class Trainer:
             return
         self.state, self.step, extra = restore_checkpoint(
             self.tcfg.ckpt_dir, self.state, shardings=self.shardings)
+        saved = (extra or {}).get("plan")
+        pins = (extra or {}).get("wire_pins", {})
+        if (saved and saved != self.plan.tables()) or \
+                pins != self._wire_pins(self.plan):
+            self._adopt_saved_plan(saved or {}, pins)
+        # recovery latency must not read as a straggler, and the in-flight
+        # timing sample (if any) now spans a restore, not a step
+        self.monitor.note_recovery()
         log.info("restored checkpoint at step %d", self.step)
+
+    def _adopt_saved_plan(self, saved: dict, wire_pins: Optional[dict] = None):
+        """Re-analyze + rebuild the jitted step against a checkpoint's plan
+        record. The saved per-table α reproduces the Table-3 method argmin,
+        the saved capacities/grown flags override the build-time census,
+        and ``wire_pins`` re-applies profiled dense wire-dtype choices —
+        without this, restoring a checkpoint written after a
+        capacity-growth replan rebuilds the *estimate's* smaller buffers
+        and the restored run immediately re-overflows (and a method or
+        wire flip recorded at save time would silently revert)."""
+        census = estimate_census(self.model, self.rt)
+        if wire_pins:
+            census.wire_dtypes.update(wire_pins)
+        for name, ent in saved.items():
+            t = census.tables.get(name)
+            if t is None:
+                continue
+            alpha = ent.get("alpha")
+            census.tables[name] = dataclasses.replace(
+                t,
+                alpha=float(alpha) if alpha is not None else t.alpha,
+                capacity=int(ent.get("capacity", t.capacity)),
+                grown=bool(ent.get("grown", False)))
+            if ent.get("wire_dtype"):
+                census.wire_dtypes[name] = ent["wire_dtype"]
+        if census.tables:
+            census.capacity = max(
+                census.capacity,
+                max(t.capacity for t in census.tables.values()))
+        new_plan = analyze(self.model, self.rt, census=census)
+        diff = plan_diff(self.plan, new_plan)
+        log.info("restore adopted the checkpoint's plan record: "
+                 "capacities %s -> %s, flips=%s", diff["table_capacity"][0],
+                 diff["table_capacity"][1], diff["flips"])
+        self.plan = new_plan
+        self.train_step, self.state, self.shardings = apply_replan(
+            self.model, self.optimizer, self.rt, new_plan, self.state, diff)
+        self.monitor.note_exchange(
+            new_plan.bucket_plan.stats() if new_plan.bucket_plan else None)
+
+    def _observed_census(self, live_plan):
+        """The census the replan loop runs on: the profile's per-table
+        observed uniques/overflow folded over the build-time estimate, with
+        sticky growth against ``live_plan`` and (under wire_dtype_auto)
+        per-parameter wire hints from the magnitude census. Shared by
+        ``maybe_replan`` and the elastic rebuild — reads ``self.model`` /
+        ``self.rt``, so on a remesh it prices against the *new* world."""
+        base = estimate_census(self.model, self.rt)
+        live = {n: (live_plan.table_capacity.get(n, 0),
+                    n in live_plan.grown_tables)
+                for n in live_plan.table_methods}
+        census = observed_census(self.profile, base,
+                                 self.model_cfg.vocab_size, self.run_cfg,
+                                 live=live)
+        if self.run_cfg.wire_dtype_auto and live_plan.bucket_plan is not None:
+            names = [p.name for p in plan_leaves(live_plan.params)]
+            census.wire_dtypes = wire_dtype_hints(
+                self.profile, live_plan.bucket_plan, names,
+                outlier_ratio=self.run_cfg.wire_outlier_ratio,
+                default=self.run_cfg.wire_dtype)
+        return census
 
     def remesh(self, new_mesh):
         """Elastic re-mesh: reshard live state onto a new mesh (e.g. after
         dropping a failed host slice). The rebuild derives shardings from
-        the restored values themselves — no throwaway ``model.init``."""
+        the restored values themselves — no throwaway ``model.init`` — and
+        carries the observed census across the mesh change (grown
+        capacities and profiled choices survive; only the world-size terms
+        re-price)."""
         host_state = jax.tree.map(
             lambda a: None if a is None else np.asarray(jax.device_get(a)),
             self.state)
-        self._build(new_mesh, state=host_state)
+        old_sig = _bucket_signature(self.plan)
+        self._build(new_mesh, state=host_state, carry_plan=self.plan)
+        if _bucket_signature(self.plan) != old_sig:
+            # bucket magnitude EMAs are index-keyed; a regrouped layout on
+            # the new mesh makes the old samples mis-attributed
+            self.profile.reset_grad_census()
+
+    def _auto_remesh(self) -> Optional[dict]:
+        """Act on the monitor's straggler escalation: commit a checkpoint,
+        evict the suspected-slow data slice, and resume on the live state.
+
+        Single-controller repro cannot attribute *which* host is slow (step
+        times aggregate over the collective), so the last data slice is
+        dropped by convention — a multi-host deployment would map the
+        straggling process index to its slice. The rebuild re-runs
+        ``analyze()`` against the smaller world, so methods, capacities,
+        and buckets are re-priced at the new N (a ps↔allreduce flip across
+        the remesh is legitimate and handled). Returns the plan diff across
+        the remesh, or None when the mesh cannot shrink.
+        """
+        new_mesh = shrink_mesh(
+            self.mesh,
+            drop_axis_index=dict(self.mesh.shape)["data"] - 1
+            if self.mesh is not None and "data" in self.mesh.axis_names
+            else 0,
+            axis="data", min_axis_size=self.tcfg.min_data_parallel)
+        if new_mesh is None:
+            log.warning(
+                "straggler escalation at step %d but the mesh cannot "
+                "shrink (data axis at or below min_data_parallel=%d) — "
+                "re-arming the monitor", self.step,
+                self.tcfg.min_data_parallel)
+            self.monitor.note_recovery()   # re-arm instead of re-firing
+            return None
+        if self.ckpt is not None:
+            # synchronous commit before touching placement: a crash during
+            # the reshard recovers from this step, not an older one. A
+            # checkpoint failure (including a stored async one re-raised by
+            # the wait) must not abort the recovery itself — the live-state
+            # remesh does not depend on it
+            try:
+                self.ckpt.save_sync(self.step, self.state,
+                                    extra=self._ckpt_extra())
+            except Exception as e:
+                log.exception("pre-remesh checkpoint failed; continuing "
+                              "with the live-state remesh")
+                self.monitor.note_ckpt_error(e)
+        old_plan, old_shape = self.plan, dict(self.mesh.shape)
+        self.remesh(new_mesh)
+        diff = plan_diff(old_plan, self.plan)
+        self.monitor.note_remesh()
+        log.warning(
+            "auto-remesh at step %d: mesh %s -> %s, flips=%s, "
+            "capacities %s -> %s", self.step, old_shape,
+            dict(new_mesh.shape), diff["flips"], diff["table_capacity"][0],
+            diff["table_capacity"][1])
+        return diff
 
     # ------------------------------------------------------------------
     def maybe_replan(self) -> Optional[dict]:
@@ -141,19 +323,7 @@ class Trainer:
         """
         if not self.profile.ready(self.tcfg.replan_warmup):
             return None
-        base = estimate_census(self.model, self.rt)
-        live = {n: (self.plan.table_capacity.get(n, 0),
-                    n in self.plan.grown_tables)
-                for n in self.plan.table_methods}
-        census = observed_census(self.profile, base,
-                                 self.model_cfg.vocab_size, self.run_cfg,
-                                 live=live)
-        if self.run_cfg.wire_dtype_auto and self.plan.bucket_plan is not None:
-            names = [p.name for p in plan_leaves(self.plan.params)]
-            census.wire_dtypes = wire_dtype_hints(
-                self.profile, self.plan.bucket_plan, names,
-                outlier_ratio=self.run_cfg.wire_outlier_ratio,
-                default=self.run_cfg.wire_dtype)
+        census = self._observed_census(self.plan)
         new_plan = analyze(self.model, self.rt, census=census)
         diff = plan_diff(self.plan, new_plan, self.tcfg.replan_drift)
         self.monitor.note_alpha(census.alpha)
@@ -200,14 +370,31 @@ class Trainer:
                     self.monitor.note_overflow(
                         self.profile.dropped(self.plan.table_methods))
                 retries = 0
-            except Exception as e:  # failure path: restore + retry
+            except Exception:  # failure path: restore + retry
                 retries += 1
                 log.exception("step %d failed (retry %d/%d)",
                               self.step, retries, self.tcfg.max_retries)
                 if retries > self.tcfg.max_retries or self.ckpt is None:
                     raise
-                self.ckpt.wait()
-                self.maybe_restore()
+                try:
+                    self.ckpt.wait()
+                except Exception:
+                    log.exception("in-flight checkpoint also failed")
+                if latest_step(self.tcfg.ckpt_dir) is None:
+                    # no committed checkpoint to fall back on — and the
+                    # failed call may already have consumed the donated
+                    # state buffers, so retrying on self.state would feed
+                    # the step poisoned memory. Rebuild from scratch.
+                    log.warning("no committed checkpoint: reinitializing "
+                                "state from seed %d at step 0",
+                                self.run_cfg.seed)
+                    self.train_step, self.state, self.shardings = build_step(
+                        self.model, self.optimizer, self.rt, self.plan,
+                        None, seed=self.run_cfg.seed)
+                    self.step = 0
+                    self.monitor.note_recovery()
+                else:
+                    self.maybe_restore()
                 continue
             stats = self.monitor.stop(tokens=tokens_per_step)
             self.step += 1
@@ -218,21 +405,40 @@ class Trainer:
                 stats["replans"] = self.monitor.replans
                 if self.monitor.observed_alpha is not None:
                     stats["observed_alpha"] = self.monitor.observed_alpha
+            if self.ckpt is not None:
+                # mirror the background-writer state each step (before the
+                # save below can consume it): a pending failure keeps
+                # re-noting until consumed; once the writer is clean again
+                # and no new failure is noted, the signal self-heals
+                self.monitor.note_ckpt_error(self.ckpt.error)
             if self.ckpt is not None and self.step % self.tcfg.ckpt_every == 0:
-                self.ckpt.save(self.step, self.state,
-                               extra={"dataset_step": self.step})
+                # a failed *previous* background write re-raises out of
+                # save()'s internal wait(); periodic checkpointing is not
+                # worth aborting a healthy run — surface it and try again
+                # next period (the final end-of-run save still raises)
+                try:
+                    self.ckpt.save(self.step, self.state,
+                                   extra=self._ckpt_extra())
+                except Exception as e:
+                    log.exception("checkpoint at step %d failed", self.step)
+                    self.monitor.note_ckpt_error(e)
+            if self.monitor.remesh_suggested and self.tcfg.remesh_on_straggle:
+                if self._auto_remesh() is not None:
+                    stats["remeshes"] = self.monitor.remeshes
+                    if self.mesh is not None:
+                        stats["mesh"] = dict(self.mesh.shape)
+            elif self.monitor.straggler_suspected:
+                log.warning("sustained step-time regression at step %d — "
+                            "straggler suspected; consider remesh() or "
+                            "remesh_on_straggle=True", self.step)
             if on_metrics is not None:
                 on_metrics(self.step, {**metrics, **stats})
             elif self.step % self.tcfg.log_every == 0:
                 log.info("step %d loss %.4f %.0f tok/s", self.step,
                          metrics.get("loss", float("nan")),
                          stats["tokens_per_s"])
-            if self.monitor.straggler_suspected:
-                log.warning("sustained step-time regression at step %d — "
-                            "straggler suspected; consider remesh()",
-                            self.step)
         if self.ckpt is not None:
             self.ckpt.save(self.step, self.state,
-                           extra={"dataset_step": self.step})
+                           extra=self._ckpt_extra())
             self.ckpt.wait()
         return self.state

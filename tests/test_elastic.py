@@ -1,0 +1,594 @@
+"""Elastic straggler response: monitor escalation, shrink_mesh, the
+trainer's auto-remesh loop, and the hardened checkpoint/restore fault path.
+
+Covers: the StepMonitor escalation policy (sustained outliers ->
+remesh_suggested, post-remesh cooldown, recovery-aware timing attribution,
+true medians on even windows); launch/mesh.shrink_mesh eligibility;
+restore-across-a-grown-plan (the checkpoint manifest carries the plan
+record, and maybe_restore re-analyzes/rebuilds against it); the retry
+path's no-checkpoint rebuild (donated buffers must never be silently
+retried); and the end-to-end distributed chaos scenario — an injected
+sustained slowdown escalates to an automatic checkpoint + remesh onto a
+smaller data axis with a bit-equal f32 loss prefix vs a never-straggled
+run.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from conftest import distributed_run
+from repro.checkpoint.ckpt import (gc_checkpoints, latest_step,
+                                   restore_checkpoint, save_checkpoint)
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.data import SyntheticLM
+from repro.runtime import monitor as monitor_mod
+from repro.runtime.monitor import StepMonitor
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+# ---------------------------------------------------------------------------
+# monitor escalation policy
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    """Deterministic stand-in for time.perf_counter (starts off 0 so the
+    first start() timestamp is unambiguous)."""
+
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+def _tick(mon: StepMonitor, clock: _Clock, dt: float) -> dict:
+    mon.start()
+    clock.t += dt
+    return mon.stop(tokens=10)
+
+
+@pytest.fixture()
+def clock(monkeypatch):
+    c = _Clock()
+    monkeypatch.setattr(monitor_mod.time, "perf_counter", c)
+    return c
+
+
+def test_median_true_median_on_even_windows():
+    mon = StepMonitor()
+    assert mon.median() == 0.0
+    mon.times.extend([1.0, 5.0, 3.0])
+    assert mon.median() == 3.0                 # odd: middle element
+    mon.times.append(9.0)
+    assert mon.median() == 4.0                 # even: mean of middle two,
+    #                                            not the upper middle (5.0)
+
+
+def test_sustained_outliers_escalate_to_remesh_suggested(clock):
+    mon = StepMonitor(sustained=3, min_samples=4, cooldown=10)
+    for _ in range(6):
+        stats = _tick(mon, clock, 1.0)
+    assert not mon.straggler_suspected
+    for i in range(3):
+        stats = _tick(mon, clock, 5.0)        # 5x the 1.0 median
+        assert mon._outlier_run == i + 1
+    assert mon.straggler_suspected
+    assert mon.remesh_suggested
+    assert stats["straggler_suspected"] and stats["remesh_suggested"]
+
+
+def test_outlier_detection_waits_for_min_samples(clock):
+    mon = StepMonitor(sustained=1, min_samples=4)
+    _tick(mon, clock, 1.0)
+    _tick(mon, clock, 1.0)
+    _tick(mon, clock, 50.0)                   # only 3 samples: no verdict
+    assert not mon.straggler_suspected
+    _tick(mon, clock, 1.0)
+    _tick(mon, clock, 50.0)                   # 5th sample: detection armed
+    assert mon.straggler_suspected
+
+
+def test_remesh_cooldown_blocks_resuggestion(clock):
+    mon = StepMonitor(sustained=3, min_samples=4, cooldown=14)
+    for _ in range(4):
+        _tick(mon, clock, 1.0)
+    for _ in range(3):
+        _tick(mon, clock, 5.0)
+    assert mon.remesh_suggested
+    mon.note_remesh()                         # at total_steps = 7
+    assert mon.remeshes == 1
+    assert not mon.times and mon._outlier_run == 0   # fresh timing regime
+    assert not mon.remesh_suggested
+    # a new sustained run inside the cooldown is suspected but NOT escalated
+    for _ in range(8):
+        _tick(mon, clock, 1.0)                # steps 8..15
+    for _ in range(3):
+        _tick(mon, clock, 5.0)                # steps 16..18: 11 < 14 since
+    assert mon.straggler_suspected and not mon.remesh_suggested
+    for _ in range(3):
+        _tick(mon, clock, 5.0)                # steps 19..21: cooldown elapsed
+    assert mon.straggler_suspected and mon.remesh_suggested
+
+
+def test_note_recovery_drops_sample_and_outlier_run(clock):
+    mon = StepMonitor(sustained=2, min_samples=2)
+    for _ in range(4):
+        _tick(mon, clock, 1.0)
+    _tick(mon, clock, 9.0)
+    assert mon._outlier_run == 1
+    # a restore pause happens mid-step: the in-flight sample must not enter
+    # the window (it would read as a 50s straggler step) and the run resets
+    mon.start()
+    clock.t += 50.0
+    mon.note_recovery()
+    n = len(mon.times)
+    stats = mon.stop(tokens=10)
+    assert len(mon.times) == n                # sample dropped
+    assert stats["step_time_s"] == 0.0
+    assert mon._outlier_run == 0
+    assert mon.total_steps == 6               # throughput accounting kept
+
+
+def test_ckpt_error_surfaces_in_stats(clock):
+    mon = StepMonitor()
+    mon.note_ckpt_error(OSError("disk full"))
+    stats = _tick(mon, clock, 1.0)
+    assert stats["ckpt_error"] == "OSError: disk full"
+    mon.note_ckpt_error(None)
+    assert "ckpt_error" not in _tick(mon, clock, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# shrink_mesh eligibility (structural checks run distributed, below)
+# ---------------------------------------------------------------------------
+
+def test_shrink_mesh_eligibility_single_device():
+    from repro.launch.mesh import make_mesh, shrink_mesh
+    assert shrink_mesh(None, 0) is None
+    mesh = make_mesh((1, 1), ("data", "model"))
+    assert shrink_mesh(mesh, 0) is None               # data axis at 1
+    assert shrink_mesh(mesh, 0, axis="pod") is None   # axis absent
+    with pytest.raises(ValueError):
+        shrink_mesh(mesh, 5)                          # no such slice
+
+
+# ---------------------------------------------------------------------------
+# checkpoint dir hardening
+# ---------------------------------------------------------------------------
+
+def _tiny_state():
+    import jax
+    import jax.numpy as jnp
+    from repro.optim.optimizer import TrainState
+    params = {"w": jnp.arange(8, dtype=jnp.float32)}
+    return TrainState(step=jnp.asarray(1, jnp.int32), params=params,
+                      m=None, v=None, ema=None)
+
+
+def test_latest_step_and_gc_ignore_stray_entries(tmp_path):
+    s = _tiny_state()
+    for i in (1, 2, 3):
+        save_checkpoint(str(tmp_path), i, s)
+    # the strays that used to crash int(d.split("_")[1])
+    (tmp_path / "notes.txt").write_text("hi")
+    (tmp_path / "step_latest").mkdir()
+    (tmp_path / "step_abc").mkdir()
+    (tmp_path / "step_5_backup").mkdir()
+    # digits but not this writer's step_%08d padding: counting it would
+    # point restore/GC at a nonexistent padded name
+    (tmp_path / "step_7").mkdir()
+    os.makedirs(tmp_path / "step_00000009.tmp")       # crashed writer
+    assert latest_step(str(tmp_path)) == 3
+    gc_checkpoints(str(tmp_path), keep=2)
+    kept = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_0")
+                  and not d.endswith(".tmp"))
+    assert kept == ["step_00000002", "step_00000003"]
+    assert (tmp_path / "step_latest").exists()        # strays untouched
+    assert (tmp_path / "step_7").exists()
+    _, step, _ = restore_checkpoint(str(tmp_path), s)
+    assert step == 3
+
+
+def test_async_checkpointer_save_sync_commits(tmp_path):
+    from repro.checkpoint.ckpt import AsyncCheckpointer
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    ck.save_sync(4, _tiny_state(), extra={"plan": {}})
+    assert ck.last_committed == 4                     # no wait() needed
+    assert latest_step(str(tmp_path)) == 4
+
+
+def test_save_sync_discards_stale_async_error(tmp_path):
+    """The pre-remesh safety checkpoint must not be blocked by a *stale*
+    background failure — the fresh commit is the whole point."""
+    from repro.checkpoint.ckpt import AsyncCheckpointer
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    ck._error = OSError("stale background failure")
+    ck.save_sync(3, _tiny_state())
+    assert ck.last_committed == 3
+    assert latest_step(str(tmp_path)) == 3
+    ck.wait()                                 # consumed: must not re-raise
+
+
+def test_background_ckpt_failure_does_not_abort_run(tiny_shape, tmp_path):
+    """A stored background-write error used to re-raise out of the next
+    periodic save() and abort a healthy run; now it surfaces as stats
+    ckpt_error, the save retries next period, and training completes."""
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    rc = RunConfig(attention_impl="naive", remat="none")
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch)
+    tcfg = TrainerConfig(total_steps=6, ckpt_dir=str(tmp_path), ckpt_every=2)
+    t = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    t.ckpt._error = OSError("disk full")              # failed async write
+    stats = []
+    t.run(on_metrics=lambda s, m: stats.append(m))    # must not raise
+    assert t.step == 6
+    assert any(m.get("ckpt_error") == "OSError: disk full" for m in stats)
+    assert "ckpt_error" not in stats[-1]              # healed after retry
+    assert latest_step(str(tmp_path)) == 6            # later saves landed
+
+
+# ---------------------------------------------------------------------------
+# restore across a grown plan (the manifest plan record)
+# ---------------------------------------------------------------------------
+
+def _growth_setup(tiny_shape, ckpt_dir, total_steps=8, replan_every=6):
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    rc = RunConfig(attention_impl="naive", remat="none",
+                   capacity_mode="capped", capacity_factor=2.0,
+                   zipf_a=2.0, capacity_growth=1.5, overflow_tolerance=0.5)
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch, zipf_a=2.0, burst_steps=4,
+                     burst_zipf_a=1.3)
+    tcfg = TrainerConfig(total_steps=total_steps, ckpt_dir=ckpt_dir,
+                         ckpt_every=50, replan_every=replan_every,
+                         replan_warmup=2, replan_drift=50.0)
+    return cfg, rc, ds, tcfg
+
+
+def test_restore_adopts_grown_plan_from_manifest(tiny_shape, tmp_path):
+    """A checkpoint written after a capacity-growth replan must restore with
+    the *grown* plan: previously maybe_restore kept the build-time estimate
+    (smaller buffers, pre-flip methods) and never rebuilt the step, so the
+    resumed run silently re-overflowed the rows the growth had rescued."""
+    cfg, rc, ds, tcfg = _growth_setup(tiny_shape, str(tmp_path))
+    t = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    cap0 = t.plan.table_capacity["embed"]
+    t.run()
+    grown_cap = t.plan.table_capacity["embed"]
+    assert grown_cap > cap0 and "embed" in t.plan.grown_tables
+    # the manifest records the live plan, not just the dataset cursor
+    d = os.path.join(str(tmp_path), f"step_{t.step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        extra = json.load(f)["extra"]
+    assert extra["plan"]["embed"]["capacity"] == grown_cap
+    assert extra["plan"]["embed"]["grown"] is True
+
+    # a fresh trainer starts from the build-time estimate...
+    t2 = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    assert t2.plan.table_capacity["embed"] == cap0
+    step_fn0 = t2.train_step
+    t2.maybe_restore()
+    # ...and restore re-analyzes + rebuilds against the saved record
+    assert t2.step == t.step
+    assert t2.plan.table_capacity["embed"] == grown_cap
+    assert "embed" in t2.plan.grown_tables
+    assert t2.train_step is not step_fn0      # the jitted step was rebuilt
+    assert t2.monitor._outlier_run == 0
+    # and the restored run trains on under the adopted plan
+    t2.tcfg = dataclasses.replace(t2.tcfg, total_steps=t.step + 2,
+                                  replan_every=0)
+    stats = []
+    t2.run(on_metrics=lambda s, m: stats.append(m))
+    assert len(stats) == 2
+    assert all(np.isfinite(m["loss"]) for m in stats)
+
+
+def test_remesh_carries_observed_plan_state(tiny_shape, tmp_path):
+    """An elastic rebuild must not revert to the build-time estimate: a
+    capacity the overflow rule grew (and its grown stickiness) survives a
+    remesh — the new plan is derived from the observed census with sticky
+    growth against the pre-remesh plan, only the world-size terms
+    re-price."""
+    cfg, rc, ds, tcfg = _growth_setup(tiny_shape, str(tmp_path))
+    t = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    cap0 = t.plan.table_capacity["embed"]
+    t.run()
+    assert "embed" in t.plan.grown_tables
+    grown_cap = t.plan.table_capacity["embed"]
+    t.remesh(None)
+    # the estimate alone would re-derive cap0; the carried census holds
+    # growth-headroom sizing and the grown flag
+    assert t.plan.table_capacity["embed"] > cap0, \
+        (cap0, t.plan.table_capacity["embed"], grown_cap)
+    assert "embed" in t.plan.grown_tables
+    t.tcfg = dataclasses.replace(t.tcfg, total_steps=t.step + 2,
+                                 replan_every=0)
+    stats = []
+    t.run(on_metrics=lambda s, m: stats.append(m))
+    assert all(np.isfinite(m["loss"]) for m in stats)
+
+
+def test_restore_adopts_dense_wire_pins(tiny_shape, tmp_path):
+    """Profiled wire_dtype_auto pins cover *dense* parameters, which
+    Plan.tables() (sparse-only) cannot record — the manifest's wire_pins
+    entry must bring them back, or a restored run silently reverts an
+    outlier-prone bucket's f32 pin to the bf16 default."""
+    from repro.core.plan import plan_diff, plan_leaves
+    from repro.core.transform import analyze, apply_replan, estimate_census
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    rc = RunConfig(attention_impl="naive", remat="none", opsw=True,
+                   wire_dtype="bfloat16")
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch)
+    tcfg = TrainerConfig(total_steps=2, ckpt_dir=str(tmp_path), ckpt_every=50)
+    t = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    # a profiled pin lands (as wire_dtype_hints would): one dense param
+    # keeps f32 on the wire
+    pinned = next(p.name for p in plan_leaves(t.plan.params) if not p.sparse)
+    census = estimate_census(t.model, t.rt)
+    census.wire_dtypes = {pinned: "float32"}
+    new_plan = analyze(t.model, t.rt, census=census)
+    diff = plan_diff(t.plan, new_plan)
+    assert diff["wire_flips"]
+    t.plan = new_plan
+    t.train_step, t.state, t.shardings = apply_replan(
+        t.model, t.optimizer, t.rt, new_plan, t.state, diff)
+    t.run()                                   # final save carries wire_pins
+    assert t._wire_pins(t.plan) == {pinned: "float32"}
+
+    t2 = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    assert t2._wire_pins(t2.plan) == {}       # build-time default
+    t2.maybe_restore()
+    assert t2._wire_pins(t2.plan) == {pinned: "float32"}
+    assert t2.step == 2
+
+
+def test_restore_with_matching_plan_keeps_step(tiny_shape, tmp_path):
+    """No spurious rebuild: restoring a checkpoint whose plan record matches
+    the live plan must not re-jit."""
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    rc = RunConfig(attention_impl="naive", remat="none")
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch)
+    tcfg = TrainerConfig(total_steps=2, ckpt_dir=str(tmp_path), ckpt_every=50)
+    t = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    t.run()
+    t2 = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    step_fn0 = t2.train_step
+    t2.maybe_restore()
+    assert t2.step == 2
+    assert t2.train_step is step_fn0
+
+
+# ---------------------------------------------------------------------------
+# retry path: no committed checkpoint => rebuild, never retry poisoned state
+# ---------------------------------------------------------------------------
+
+def _flaky_once(t: Trainer, fail_at_step: int):
+    orig = t.train_step
+    fired = {"n": 0}
+
+    def step(state, batch):
+        if t.step == fail_at_step and not fired["n"]:
+            fired["n"] = 1
+            raise RuntimeError("injected step failure")
+        return orig(state, batch)
+
+    t.train_step = step
+    return fired
+
+
+def test_retry_without_checkpoint_rebuilds_fresh_state(tiny_shape, tmp_path):
+    """A step failure before any checkpoint has committed must NOT retry on
+    self.state — the failed call may have consumed the donated buffers.
+    The driver rebuilds from seed at step 0 instead."""
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    rc = RunConfig(attention_impl="naive", remat="none")
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch)
+    tcfg = TrainerConfig(total_steps=6, ckpt_dir=str(tmp_path),
+                         ckpt_every=100)
+    t = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    fired = _flaky_once(t, fail_at_step=3)
+    steps = []
+    t.run(on_metrics=lambda s, m: steps.append(s))
+    assert fired["n"] == 1
+    # the run restarted from 0 (fresh init), then completed
+    assert steps == [1, 2, 3, 1, 2, 3, 4, 5, 6]
+    assert t.step == 6
+    assert int(np.asarray(t.state.step)) == 6         # fresh state, 6 updates
+    assert latest_step(str(tmp_path)) == 6            # final save committed
+
+
+def test_retry_with_checkpoint_restores_it(tiny_shape, tmp_path):
+    cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+    rc = RunConfig(attention_impl="naive", remat="none")
+    ds = SyntheticLM(cfg.vocab_size, tiny_shape.seq_len,
+                     tiny_shape.global_batch)
+    tcfg = TrainerConfig(total_steps=6, ckpt_dir=str(tmp_path), ckpt_every=2)
+    t = Trainer(cfg, tiny_shape, rc, tcfg, ds)
+    _flaky_once(t, fail_at_step=5)
+    steps = []
+    t.run(on_metrics=lambda s, m: steps.append(s))
+    # rolled back to the step-4 checkpoint, not to 0
+    assert steps == [1, 2, 3, 4, 5, 5, 6]
+    assert t.step == 6 and int(np.asarray(t.state.step)) == 6
+
+
+# ---------------------------------------------------------------------------
+# distributed: shrink_mesh structure + the full chaos scenario
+# ---------------------------------------------------------------------------
+
+@pytest.mark.distributed
+def test_shrink_mesh_drops_one_slice_and_keeps_grid():
+    code = """
+from repro.launch.mesh import shrink_mesh
+
+mesh = make_mesh((4, 2), ("data", "model"))
+grid = np.asarray(mesh.devices)
+m2 = shrink_mesh(mesh, drop_axis_index=3)
+kept = np.asarray(m2.devices)
+dropped_ids = [d.id for d in grid[3]]
+same_grid = all(kept[i, j].id == grid[i, j].id
+                for i in range(3) for j in range(2))
+floor = shrink_mesh(m2, 0, min_axis_size=3)
+print("RESULT:" + json.dumps({
+    "shape": dict(m2.shape), "axes": list(m2.axis_names),
+    "same_grid": bool(same_grid),
+    "disjoint": not (set(d.id for d in kept.flat) & set(dropped_ids)),
+    "floored": floor is None}))
+"""
+    res = distributed_run(code, devices=8)
+    assert res["shape"] == {"data": 3, "model": 2}
+    assert res["axes"] == ["data", "model"]
+    assert res["same_grid"] and res["disjoint"]
+    assert res["floored"] is True             # 3 - 1 < min_axis_size=3
+
+
+@pytest.mark.distributed
+def test_remesh_reprices_methods_for_the_new_world_size():
+    """The cost model's exchange terms depend on N, so shrinking the mesh
+    must re-run the Table-3 argmin: at a declared α=0.3 on a (D, 1) mesh
+    (no row-sharding axis), mpi_gatherv costs 2(N-1)αb — dearer than the
+    dense allreduce's 2(N-1)/N·b at N=4 (1.8b vs 1.5b), cheaper at N=3
+    (1.2b vs 1.33b). The auto-remesh rebuild must flip the method and keep
+    training."""
+    code = """
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.data import SyntheticLM
+from repro.launch.mesh import shrink_mesh
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+shape = ShapeConfig("t", seq_len=32, global_batch=8, kind="train")
+rc = RunConfig(attention_impl="naive", remat="none", param_dtype="float32",
+               compute_dtype="float32", wire_dtype="float32",
+               link_latency=0.0, table_alpha=(("embed", 0.3),))
+ds = SyntheticLM(cfg.vocab_size, 32, 8)
+mesh = make_mesh((4, 1), ("data", "model"))
+t = Trainer(cfg, shape, rc, TrainerConfig(total_steps=2), ds, mesh=mesh)
+method4 = t.plan.table_methods["embed"]
+with use_mesh(mesh):
+    t.run()
+mesh3 = shrink_mesh(mesh, drop_axis_index=3)
+t.remesh(mesh3)
+method3 = t.plan.table_methods["embed"]
+t.tcfg = TrainerConfig(total_steps=4)
+losses = []
+with use_mesh(mesh3):
+    t.run(on_metrics=lambda s, m: losses.append(float(m["loss"])))
+print("RESULT:" + json.dumps({
+    "method4": method4, "method3": method3,
+    "shape3": dict(mesh3.shape), "losses": losses}))
+"""
+    res = distributed_run(code, devices=8, timeout=600)
+    assert res["method4"] == "allreduce", res
+    assert res["method3"] == "mpi_gatherv", res
+    assert res["shape3"] == {"data": 3, "model": 1}
+    assert len(res["losses"]) == 2
+    assert all(np.isfinite(l) for l in res["losses"])
+
+
+@pytest.mark.distributed
+def test_auto_remesh_on_sustained_straggle_keeps_trajectory():
+    """The acceptance scenario: a sustained injected slowdown escalates to
+    an automatic checkpoint + remesh onto a smaller data axis (the plan
+    re-priced for the new world size), training resumes on the live state,
+    and the f32 loss trajectory is bit-equal to a never-straggled run over
+    the shared (pre-remesh) step range."""
+    code = """
+import time
+from repro.checkpoint.ckpt import latest_step
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.data import SyntheticLM
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+shape = ShapeConfig("t", seq_len=32, global_batch=8, kind="train")
+kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
+          compute_dtype="float32", wire_dtype="float32",
+          capacity_mode="capped", capacity_factor=2.0, link_latency=0.0)
+STEPS, SLOW_FROM, SLEEP = 14, 6, 0.3
+
+def drive(straggle, ckpt_dir):
+    ds = SyntheticLM(cfg.vocab_size, 32, 8)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    tcfg = TrainerConfig(total_steps=STEPS, ckpt_dir=ckpt_dir,
+                         ckpt_every=100, remesh_on_straggle=straggle,
+                         remesh_cooldown=20, min_data_parallel=2)
+    t = Trainer(cfg, shape, RunConfig(**kw), tcfg, ds, mesh=mesh)
+    t.monitor.sustained = 3
+    t.monitor.min_samples = 4
+    if straggle:
+        orig = t.train_step
+        def slow(state, batch):
+            if t.step >= SLOW_FROM:
+                time.sleep(SLEEP)     # the 'slow host' gating the collective
+            return orig(state, batch)
+        t.train_step = slow
+    tables0 = t.plan.tables()
+    hist = []
+    with use_mesh(mesh):
+        t.run(on_metrics=lambda s, m: hist.append(dict(
+            step=s, loss=float(m["loss"]),
+            remeshes=int(m.get("remeshes", 0)), dt=m["step_time_s"])))
+    return t, tables0, hist
+
+import tempfile
+ck = tempfile.mkdtemp()
+base_t, base_tables, base_hist = drive(False, None)
+t, tables0, hist = drive(True, ck)
+
+remesh_steps = [h["step"] for h in hist if h["remeshes"] == 1]
+remesh_at = remesh_steps[0] if remesh_steps else -1
+manifest = {}
+if remesh_at > 0:
+    import json as _json
+    with open(f"{ck}/step_{remesh_at:08d}/manifest.json") as f:
+        manifest = _json.load(f)["extra"]
+print("RESULT:" + json.dumps({
+    "remeshes": t.monitor.remeshes,
+    "remesh_at": remesh_at,
+    "mesh_after": dict(t.mesh.shape),
+    "tables_before": tables0, "tables_after": t.plan.tables(),
+    "base_losses": [h["loss"] for h in base_hist],
+    "losses": [h["loss"] for h in hist],
+    "dts": [h["dt"] for h in hist],
+    "manifest_mesh": manifest.get("mesh"),
+    "manifest_plan_tables": sorted(manifest.get("plan", {})),
+    "latest_ckpt": latest_step(ck),
+    "final_step": t.step}))
+"""
+    res = distributed_run(code, devices=8, timeout=600)
+    # escalation fired exactly once and shrank the data axis by one slice
+    assert res["remeshes"] == 1, res
+    r = res["remesh_at"]
+    assert r >= 6 + 3, res                    # needed >= sustained slow steps
+    assert res["mesh_after"] == {"data": 3, "model": 2}
+    assert res["final_step"] == 14
+    # the plan was re-priced for the smaller world (per-replica tokens grew)
+    cap0 = res["tables_before"]["embed"]["capacity"]
+    cap1 = res["tables_after"]["embed"]["capacity"]
+    assert cap1 != cap0, (cap0, cap1)
+    # the pre-remesh checkpoint committed with the old-mesh plan record
+    assert res["manifest_mesh"] == {"data": 4, "model": 2}
+    assert "embed" in res["manifest_plan_tables"]
+    assert res["latest_ckpt"] == 14           # final save after the remesh
+    # trajectory continuity: bit-equal f32 losses over the shared
+    # (pre-remesh) range, finite and sane after the swap
+    assert res["losses"][:r] == res["base_losses"][:r], \
+        (r, res["losses"], res["base_losses"])
+    post = res["losses"][r:]
+    assert all(np.isfinite(l) for l in post)
+    assert max(abs(a - b) for a, b in
+               zip(post, res["base_losses"][r:])) < 5e-2
+    # throughput recovered once the slow slice was evicted: post-remesh
+    # steps (minus the recompile step) beat the straggled steps
+    slow = res["dts"][6:r]
+    fast_again = res["dts"][r + 1:]
+    assert slow and fast_again
+    assert np.median(fast_again) < 0.5 * np.median(slow), res["dts"]

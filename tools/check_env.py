@@ -32,7 +32,10 @@ def collect() -> dict:
         "jaxlib": getattr(__import__("jaxlib"), "__version__", "?"),
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
+        "local_device_count": jax.local_device_count(),
+        "process_count": jax.process_count(),
         "devices": [str(d) for d in jax.devices()[:8]],
+        "remesh": _remesh_eligibility(),
         "xla_flags": os.environ.get("XLA_FLAGS", ""),
         "optional_deps": {
             name: importlib.util.find_spec(name) is not None
@@ -42,6 +45,21 @@ def collect() -> dict:
     }
     report["ok"] = bool(report["jax"]["supported"])
     return report
+
+
+def _remesh_eligibility() -> dict:
+    """Can the elastic auto-remesh path (Trainer.remesh_on_straggle /
+    launch/mesh.shrink_mesh) actually shrink a data axis here? It needs at
+    least 2 devices on that axis — a 1-device host can exercise the
+    escalation policy but never the shrink itself."""
+    import jax
+    n = jax.device_count()
+    return {
+        "devices": n,
+        "hosts": jax.process_count(),
+        "max_data_parallel": n,               # all-data mesh upper bound
+        "can_shrink_data_axis": n >= 2,
+    }
 
 
 def _probe_pallas() -> dict:
@@ -73,7 +91,9 @@ def main() -> int:
     j = report["jax"]
     print(f"python {report['python']}  jax {j['jax_version']}  "
           f"jaxlib {report['jaxlib']}  backend={report['backend']}  "
-          f"devices={report['device_count']}")
+          f"devices={report['device_count']} "
+          f"(local={report['local_device_count']}, "
+          f"hosts={report['process_count']})")
     print(f"compat: explicit_sharding={j['explicit_sharding']}  "
           f"axis_types={j['axis_types']}  set_mesh={j['set_mesh']}  "
           f"top_level_shard_map={j['top_level_shard_map']}  "
@@ -93,6 +113,11 @@ def main() -> int:
     else:
         print("embed_impl=pallas: UNAVAILABLE "
               f"({pal.get('error', 'unknown')}) — use embed_impl=jnp")
+    rm = report["remesh"]
+    print(f"elastic remesh: data axis can shrink="
+          f"{rm['can_shrink_data_axis']} "
+          f"(devices={rm['devices']}, hosts={rm['hosts']}; "
+          f"remesh_on_straggle drops one data slice per escalation)")
     print("PASS" if report["ok"] else
           "WARN: JAX older than the supported range — tier-1 results are "
           "not meaningful")
