@@ -1,15 +1,23 @@
 """Bucketed vs per-tensor dense-gradient exchange (core/buckets.py).
 
-Runs the same distributed train step twice on 8 fake devices — per-tensor
-(bucket_bytes=0) and bucketed — and reports, straight from the compiled
-post-SPMD HLO (utils/hlo.py):
+Runs the same distributed train step on 8 fake devices in four
+configurations and reports, straight from the compiled post-SPMD HLO
+(utils/hlo.py):
 
-  * all-reduce count per step (the α·messages term bucketing removes),
-  * per-chip collective wire bytes (must stay ~equal: bucketing fuses
-    messages, it does not change what is exchanged),
-  * max |loss| divergence over 3 steps (must be float-noise),
-  * the cost-model seconds for both exchanges (HW.link_latency model),
-  * median wall step time for both (CPU wall time is only a sanity signal).
+  * per-tensor (bucket_bytes=0) vs bucketed: all-reduce count per step
+    (the α·messages term bucketing removes) and per-chip collective wire
+    bytes (must stay ~equal: bucketing fuses messages, it does not change
+    what is exchanged), with max |loss| divergence over 3 steps at
+    float-noise;
+  * overlap on vs off at the same bucket layout (equal wire bytes):
+    ready-order collectives inside the backward vs all collectives pinned
+    after it — median wall step time for both and a 0.0 f32 loss
+    divergence (the exchange math is identical, only the schedule moves);
+  * flat ring vs hierarchical two-level on a multi-host ("pod") mesh with
+    a fitted inter-tier profile: the cost-model seconds for both
+    schedules, how many buckets the argmin sends two-level, and the loss
+    divergence against the single-tier ring on the same mesh (reduction
+    order changes, so float-noise rather than 0.0).
 
 Emits the CSV lines every benchmark emits plus machine-readable
 ``BENCH_exchange.json`` next to the repo root.
@@ -26,6 +34,7 @@ from benchmarks.common import emit, run_with_devices
 OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_exchange.json")
 
 _CODE = """
+import tempfile
 import time
 from repro.configs import RunConfig, ShapeConfig, get_config, reduced
 from repro.core.plan import ParamPlan
@@ -40,21 +49,42 @@ kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
 ds = SyntheticLM(cfg.vocab_size, 32, 8, is_encdec=True,
                  frames_dim=cfg.d_model, frames_len=8)
 mesh = make_mesh((8, 1), ("data", "model"))
+# same 8 devices regrouped as 2 hosts x 4 local replicas: the layout the
+# two-level reduce-scatter -> inter psum -> all-gather schedule targets
+pod_mesh = make_mesh((2, 4, 1), ("pod", "data", "model"))
 
-def drive(bucket_bytes):
-    with use_mesh(mesh):
+# synthetic inter-host tier (DCN-ish: 12.5 GB/s, 10 us) — only the inter
+# keys, so the intra tier keeps the roofline defaults.  On real hardware
+# this file comes from `tools/profile_collectives.py fit`.
+hw_path = tempfile.mktemp(suffix=".json")
+with open(hw_path, "w") as f:
+    json.dump({"inter_bw": 12.5e9, "inter_latency": 10e-6}, f)
+
+def drive(bucket_bytes, overlap=True, hw_profile=None, on_mesh=None):
+    m = on_mesh if on_mesh is not None else mesh
+    with use_mesh(m):
         run = get_runner(cfg, shape,
-                         RunConfig(**kw, bucket_bytes=bucket_bytes),
-                         mesh=mesh)
+                         RunConfig(**kw, bucket_bytes=bucket_bytes,
+                                   overlap=overlap, hw_profile=hw_profile),
+                         mesh=m)
         hlo = analyze_hlo(
             run.train_step.lower(run.state, ds.batch(0)).compile().as_text())
         losses, times = [], []
         for i in range(6):
             t0 = time.perf_counter()
-            m = run.run(ds.batch(i))
-            losses.append(float(m["loss"]))
+            m_ = run.run(ds.batch(i))
+            losses.append(float(m_["loss"]))
             times.append(time.perf_counter() - t0)
         bp = run.plan.bucket_plan
+        # every candidate schedule priced under THIS run's resolved hw, so
+        # the ring-vs-two-level contrast compares on the same constants
+        prices = {}
+        if bp is not None:
+            from repro.core import cost_model
+            for b in bp.buckets:
+                for k, v in cost_model.dense_schedule_seconds(
+                        b.nbytes, bp.dims, bp.hw).items():
+                    prices[k] = prices.get(k, 0.0) + v
         return {
             "all_reduce_count": hlo.collective_count.get("all-reduce", 0),
             "all_gather_count": hlo.collective_count.get("all-gather", 0),
@@ -62,17 +92,42 @@ def drive(bucket_bytes):
             "losses": losses[:3],
             "median_step_s": sorted(times[3:])[len(times[3:]) // 2],
             "bucket_stats": bp.stats() if bp else None,
+            "schedule_prices_s": prices,
         }
+
+def diverge(a, b):
+    return max(abs(x - y) for x, y in zip(a["losses"], b["losses"]))
 
 flat = drive(0)
 fused = drive(4 * 1024 * 1024)
-n_dense = 26
+
+# overlap contrast: 256 KiB -> several buckets, so the ready-order
+# schedule has something to interleave.  Same buckets, same wire bytes
+# (the pinned baseline adds one f32 per gradient leaf per bucket).
+ov = drive(256 * 1024, overlap=True)
+base = drive(256 * 1024, overlap=False)
+
+# topology contrast on the pod mesh: identical buckets priced and
+# executed flat-ring (no profile) vs two-level (fitted inter tier)
+ring_pod = drive(1024 * 1024, on_mesh=pod_mesh)
+two_level = drive(1024 * 1024, hw_profile=hw_path, on_mesh=pod_mesh)
+
 print("RESULT:" + json.dumps({
-    "n_dense_params": n_dense,
+    "n_dense_params": 26,
     "per_tensor": flat,
     "bucketed": fused,
-    "loss_divergence": max(abs(a - b) for a, b in
-                           zip(flat["losses"], fused["losses"])),
+    "loss_divergence": diverge(flat, fused),
+    "overlap": {
+        "on": ov,
+        "off": base,
+        "loss_divergence": diverge(ov, base),
+        "step_time_ratio": base["median_step_s"] / ov["median_step_s"],
+    },
+    "topology": {
+        "ring": ring_pod,
+        "two_level": two_level,
+        "loss_divergence": diverge(ring_pod, two_level),
+    },
 }))
 """
 
@@ -92,6 +147,29 @@ def main() -> None:
          f"n_buckets={stats['n_buckets']}")
     emit("buckets/loss_divergence", res["loss_divergence"],
          f"steps=3;dtype=f32")
+    ov = res["overlap"]
+    emit("buckets/overlap_step_us", ov["on"]["median_step_s"] * 1e6,
+         f"no_overlap_us={ov['off']['median_step_s'] * 1e6:.1f};"
+         f"ratio={ov['step_time_ratio']:.3f};"
+         f"divergence={ov['loss_divergence']}")
+    topo = res["topology"]
+    ring_s, two_s = topo["ring"]["bucket_stats"], topo["two_level"]["bucket_stats"]
+    prices = topo["two_level"]["schedule_prices_s"]     # same fitted hw
+    emit("buckets/two_level_est_us", prices["two_level"] * 1e6,
+         f"ring_same_hw_us={prices['ring'] * 1e6:.1f};"
+         f"n_two_level={two_s['n_two_level']};hosts={two_s['hosts']}")
+    # structural smoke: fusing must cut launches at ~equal wire bytes, the
+    # overlap schedule must be math-identical, and the fitted inter tier
+    # must actually flip buckets onto the two-level schedule
+    assert fused["all_reduce_count"] < flat["all_reduce_count"]
+    assert res["loss_divergence"] < 2e-5
+    assert ov["loss_divergence"] == 0.0, ov["loss_divergence"]
+    assert ov["on"]["bucket_stats"]["overlap"] is True
+    assert ov["off"]["bucket_stats"]["overlap"] is False
+    assert two_s["n_two_level"] >= 1 and two_s["hosts"] == 2
+    assert ring_s["n_two_level"] == 0
+    assert prices["two_level"] < prices["ring"], prices
+    assert topo["loss_divergence"] < 2e-5
     with open(OUT, "w") as f:
         json.dump(res, f, indent=2, sort_keys=True)
     print(f"wrote {os.path.normpath(OUT)}")

@@ -182,6 +182,18 @@ class RunConfig:
     # α + β·b argmin; None = utils/roofline.py HW.link_latency. 0 recovers
     # the paper's pure-byte Table-3 argmin.
     link_latency: Optional[float] = None
+    # path to a fitted hardware profile (tools/profile_collectives.py fit):
+    # JSON overriding link_bw/link_latency and — on multi-host meshes — the
+    # inter-host inter_bw/inter_latency tier, so the planner's argmin and
+    # the two-level-schedule choice run on measured constants, not defaults.
+    hw_profile: Optional[str] = None
+    # communication/computation overlap for the bucketed exchange: buckets
+    # are ordered reverse-topologically by the backward pass and each
+    # bucket's fused psum is issued inside the backward graph as soon as its
+    # last gradient is produced (core/buckets.py custom_vjp taps). False
+    # pins every bucket collective strictly after the full backward — the
+    # regression baseline; the math is bit-identical either way.
+    overlap: bool = True
     # attention implementation: naive (tests) | chunked (dry-run) | pallas (TPU)
     attention_impl: str = "chunked"
     attention_chunk: int = 1024

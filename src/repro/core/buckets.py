@@ -19,6 +19,31 @@ is written explicitly —
   * the sparse push keeps its own schedule: the embedding custom_vjp runs
     its per-device body directly on the live named axes (EmbedCtx.manual).
 
+Overlap (RunConfig.overlap, default on): buckets are assigned in
+*reverse-topological* order — greedy first-fit over the reversed parameter
+flatten order, so bucket 0 holds the last-forward parameters whose
+gradients the backward pass produces FIRST — and each bucket's fused psum
+is issued inside the backward graph itself, at the point its last member
+gradient is produced. The mechanism is a ``jax.custom_vjp`` identity "tap"
+around each bucket's parameters: the forward is the identity, and the
+backward performs the bucket's flatten → scale → cast → psum → slice-back
+exchange on the incoming cotangents before handing them on. That places
+the collective at the gradient-readiness frontier of the autodiff graph,
+so the scheduler can run it concurrently with the rest of the backward —
+tests/test_perf_paths.py asserts the first bucket's all-reduce is
+scheduled before the final gradient op. ``overlap=False`` pins every
+bucket collective strictly after the full backward (a data-dependence
+pin: one element of every gradient leaf rides each bucket's psum input
+and is sliced off after) — the regression baseline. Both paths compute
+bit-identical values: the exchange is an elementwise psum, so grouping
+and issue order never change the math.
+
+Multi-host meshes (MeshDims.hosts > 1, fitted inter-tier constants): a
+bucket whose cost-model argmin prefers it rides a *two-level* schedule —
+intra-host reduce-scatter, inter-host all-reduce of the 1/L shard,
+intra-host all-gather — instead of one flat psum, provided the mesh
+exposes the host tier as the leading "pod" batch axis.
+
 Applicability (``bucketable``): pure data-parallel meshes — every mesh axis
 that is not a batch axis has size 1, every dense parameter exchanges by
 all-reduce, and the model opens no nested shard_map of its own (MoE EP
@@ -64,9 +89,12 @@ def _effective_pspec(pspec, mesh) -> tuple:
 @dataclass(frozen=True)
 class Bucket:
     key: tuple        # (method, wire dtype name, pspec entries) group key
-    idx: tuple        # leaf positions in the flattened grads/plan tree
+    idx: tuple        # leaf positions in the flattened grads/plan tree —
+                      # reverse-topological: bucket 0 holds the last-forward
+                      # (first-backward) parameters
     sizes: tuple      # element count per member
     nbytes: int       # fused buffer wire bytes
+    schedule: str = "ring"     # ring | two_level (cost_model argmin)
 
 
 @dataclass
@@ -78,24 +106,41 @@ class BucketPlan:
     wire_bytes: int        # sum of fused buffer bytes
     bucket_bytes: int      # the RunConfig knob that sized the buckets
     hw: Any = None         # the hardware model the planner priced against
+    hosts: int = 1         # H: host groups among the replicas
+    overlap: bool = True   # issue each bucket's psum at grad readiness
+
+    @property
+    def dims(self) -> cost_model.MeshDims:
+        return cost_model.MeshDims(data=self.replicas, hosts=self.hosts)
 
     def stats(self, hw=None) -> dict:
         """Exchange accounting for runtime/monitor.py — the cost-model view
         of what bucketing saved (per step, dense push only), priced with
-        the same hardware model the planner's argmin used."""
+        the same hardware model the planner's argmin used. Each bucket is
+        priced at its chosen execution schedule; the unbucketed reference
+        is one flat ring per member tensor."""
         hw = hw or self.hw or HW
+        dims = self.dims
         ring = 2.0 * (self.replicas - 1) / max(self.replicas, 1)
+        tier = cost_model.span_tier(dims, hw)
+        est = 0.0
+        for b in self.buckets:
+            secs = cost_model.dense_schedule_seconds(b.nbytes, dims, hw)
+            est += secs.get(b.schedule, secs["ring"])
         return {
             "n_buckets": len(self.buckets),
             "n_params_bucketed": self.n_params,
             "n_collectives_dense": len(self.buckets),
             "n_collectives_unbucketed": self.n_params,
+            "n_two_level": sum(1 for b in self.buckets
+                               if b.schedule == "two_level"),
+            "hosts": self.hosts,
+            "overlap": self.overlap,
             "wire_bytes": self.wire_bytes,
             "bucket_bytes": self.bucket_bytes,
-            "est_seconds": cost_model.exchange_seconds(
-                ring * self.wire_bytes, len(self.buckets), hw),
+            "est_seconds": est,
             "est_seconds_unbucketed": cost_model.exchange_seconds(
-                ring * self.wire_bytes, self.n_params, hw),
+                ring * self.wire_bytes, self.n_params, hw, tier=tier),
         }
 
 
@@ -139,11 +184,15 @@ def bucketable(plan: Plan, rt) -> bool:
 def assign_buckets(plan: Plan, rt) -> Optional[BucketPlan]:
     """Group dense all-reduce parameters into fused exchange buffers.
 
-    Greedy first-fit in tree-flatten order (≈ backward-producer order under
-    scan-over-layers): a parameter joins the open bucket of its
-    (method, exchange dtype, pspec) group until the bucket reaches
+    Greedy first-fit in *reverse* tree-flatten order — reverse-topological
+    by the backward pass: the last-forward parameters produce their
+    gradients first, so bucket 0 fills (and its collective becomes
+    issuable) earliest in the backward. A parameter joins the open bucket
+    of its (method, exchange dtype, pspec) group until the bucket reaches
     ``RunConfig.bucket_bytes``, then a new one opens. Sparse parameters
-    whose argmin picked a sparse method keep their own exchange.
+    whose argmin picked a sparse method keep their own exchange. On
+    multi-host meshes each bucket also gets its execution schedule
+    (ring vs two-level) from the cost-model argmin.
 
     The tied-embedding coherence rule: under a manual region a gatherv'd
     table gradient would mix a replica-summed sparse part with a local
@@ -164,7 +213,8 @@ def assign_buckets(plan: Plan, rt) -> Optional[BucketPlan]:
         plan.embed_method = "allreduce"
 
     groups: dict[tuple, list] = {}
-    for i, p in enumerate(_plan_leaves(plan)):
+    leaves = list(enumerate(_plan_leaves(plan)))
+    for i, p in reversed(leaves):        # reverse-topological: see docstring
         if p.method != "allreduce":
             continue
         itemsize = jnp.dtype(_exchange_dtype(rt, p)).itemsize
@@ -179,6 +229,15 @@ def assign_buckets(plan: Plan, rt) -> Optional[BucketPlan]:
             open_buckets.append([])
         open_buckets[-1].append((i, n, None))
 
+    hw = cost_model.resolve_hw(rt.run_cfg)
+    hosts = cost_model.mesh_hosts(plan.mesh)
+    batch_axes = tuple(rt.batch_axes)
+    dims = cost_model.MeshDims(data=rt.replicas, hosts=hosts)
+    # the two-level schedule needs the host tier as an actual mesh axis to
+    # split the psum on: the leading "pod" batch axis (the layout
+    # make_production_mesh uses for multi-host worlds)
+    can_two_level = (hw.hierarchical and hosts > 1 and len(batch_axes) >= 2
+                     and batch_axes[0] == "pod")
     buckets = []
     for key, bs in groups.items():
         itemsize = jnp.dtype(key[1]).itemsize
@@ -187,16 +246,22 @@ def assign_buckets(plan: Plan, rt) -> Optional[BucketPlan]:
                 continue
             idx = tuple(i for i, _, _ in members)
             sizes = tuple(s for _, s, _ in members)
+            nbytes = sum(sizes) * itemsize
+            schedule = "ring"
+            if can_two_level:
+                schedule, _ = cost_model.choose_dense_schedule(
+                    nbytes, dims, hw)
             buckets.append(Bucket(key=key, idx=idx, sizes=sizes,
-                                  nbytes=sum(sizes) * itemsize))
+                                  nbytes=nbytes, schedule=schedule))
     if not buckets:
         return None
     return BucketPlan(
-        buckets=buckets, batch_axes=tuple(rt.batch_axes),
+        buckets=buckets, batch_axes=batch_axes,
         replicas=rt.replicas, n_params=sum(len(b.idx) for b in buckets),
         wire_bytes=sum(b.nbytes for b in buckets),
         bucket_bytes=int(rt.run_cfg.bucket_bytes),
-        hw=cost_model.resolve_hw(rt.run_cfg))
+        hw=hw, hosts=hosts,
+        overlap=bool(getattr(rt.run_cfg, "overlap", True)))
 
 
 def plan_buckets(plan: Plan, rt) -> None:
@@ -210,6 +275,62 @@ def plan_buckets(plan: Plan, rt) -> None:
 # the fused exchange step
 # ---------------------------------------------------------------------------
 
+def _two_level_psum(buf, batch_axes: tuple, local: int):
+    """Two-level dense exchange for one flat buffer: intra-host
+    reduce-scatter, inter-host all-reduce of the 1/L shard, intra-host
+    all-gather. ``batch_axes[0]`` is the host tier ("pod"); the remaining
+    axes are the L (= ``local``) intra-host replicas. Elementwise-identical
+    to one flat psum — only b/L bytes ever cross the slow tier."""
+    inter, intra = batch_axes[0], tuple(batch_axes[1:])
+    n = buf.shape[0]
+    pad = (-n) % local
+    if pad:
+        buf = jnp.concatenate([buf, jnp.zeros((pad,), buf.dtype)])
+    piece = jax.lax.psum_scatter(buf, intra, scatter_dimension=0, tiled=True)
+    piece = jax.lax.psum(piece, inter)
+    out = jax.lax.all_gather(piece, intra, axis=0, tiled=True)
+    return out[:n] if pad else out
+
+
+def _exchange_bucket(b: Bucket, gparts: list, scale: float, bp: BucketPlan,
+                     census: bool, pin=None):
+    """The fused exchange for ONE bucket: flatten → 1/N scale → census →
+    wire-dtype cast → psum (ring or two-level) → slice back. ``gparts`` are
+    the members' local gradient leaves; returns (exchanged leaves cast back
+    to the member dtypes, (|g|inf, rms) census scalars or None).
+
+    The census reads what rides the wire, pre-cast; downstream the scalars
+    join the fused metrics psum so the host sees the replica-*mean* of the
+    per-replica maxima — a profile signal for wire-dtype selection
+    (sparsity.wire_dtype_hints), not an exact global max.
+
+    ``pin`` (overlap=False): a small vector appended to the psum input and
+    sliced off after — a true data dependence on values from every gradient
+    leaf, so the scheduler cannot issue this collective before the full
+    backward has drained. ``lax.optimization_barrier`` would be the
+    idiomatic pin, but the CPU backend expands barriers away before
+    scheduling, and the regression baseline must hold everywhere."""
+    wdt = jnp.dtype(b.key[1])
+    parts = [(g.astype(jnp.float32) * scale).reshape(-1) for g in gparts]
+    buf32 = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    stats = None
+    if census:
+        stats = (jnp.max(jnp.abs(buf32)),
+                 jnp.sqrt(jnp.mean(jnp.square(buf32))))
+    if pin is not None:
+        buf32 = jnp.concatenate([buf32, pin])
+    wire = buf32.astype(wdt)
+    if b.schedule == "two_level":
+        buf = _two_level_psum(wire, bp.batch_axes, bp.dims.local_replicas)
+    else:
+        buf = jax.lax.psum(wire, bp.batch_axes)   # ONE dense collective
+    out, off = [], 0
+    for g, sz in zip(gparts, b.sizes):
+        out.append(buf[off:off + sz].reshape(g.shape).astype(g.dtype))
+        off += sz
+    return out, stats
+
+
 def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
     """(params, batch) -> ((loss, metrics), grads), grads pre-aggregated.
 
@@ -220,6 +341,18 @@ def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
     as a 1/N pre-scale (mirroring the 1/T the unbucketed mean bakes in)
     followed by the fused psum. Sparse gatherv gradients arrive replica-
     summed from the embedding push and take only the 1/N.
+
+    Overlap (bp.overlap): each bucket's exchange runs inside the backward
+    graph as the bwd of an identity ``custom_vjp`` "tap" wrapped around the
+    bucket's parameters — applied *inside* the differentiated function, so
+    autodiff routes the bucket's cotangents through the exchange at the
+    moment its last member gradient is produced. Each tap also takes a
+    zeros((2,)) census token whose cotangent smuggles the backward-computed
+    (|g|inf, rms) scalars out to the forward metrics. overlap=False pins
+    every bucket collective strictly after the full backward with a data-
+    dependence pin over all gradient leaves — the scheduling baseline;
+    both paths are bit-identical (the exchange is an elementwise psum,
+    issue order never changes the math, and the pin is sliced off).
     """
     bp: BucketPlan = plan.bucket_plan
     assert bp is not None and plan.mesh is not None
@@ -232,41 +365,99 @@ def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
     }
     scale = 1.0 / bp.replicas
     bucketed = {i for b in bp.buckets for i in b.idx}
+    grad_census = bool(getattr(rt.run_cfg, "wire_dtype_auto", False))
+    # sparse tables that kept their own exchange: the row-buffer census
+    # targets these (their grads never transit a bucket, so without this
+    # they could never earn an f32 wire pin)
+    sparse_tables = {i: p.name for i, p in enumerate(_plan_leaves(plan))
+                     if p.sparse and i not in bucketed}
+
+    def _make_tap(b: Bucket):
+        @jax.custom_vjp
+        def tap(leaves, token):
+            return leaves
+        def fwd(leaves, token):
+            return leaves, None
+        def bwd(_, cts):
+            ex, stats = _exchange_bucket(b, list(cts), scale, bp,
+                                         grad_census)
+            tok_ct = (jnp.stack(stats) if stats is not None
+                      else jnp.zeros((2,), jnp.float32))
+            return tuple(ex), tok_ct
+        tap.defvjp(fwd, bwd)
+        return tap
+
+    taps = [_make_tap(b) for b in bp.buckets]
+
+    def loss_tapped(params, tokens, batch):
+        # taps must wrap the parameters *inside* the differentiated
+        # function — wrapping before value_and_grad would leave the tap
+        # bwd (the whole exchange) outside the traced gradient path
+        pleaves, ptree = jax.tree_util.tree_flatten(params)
+        for k, b in enumerate(bp.buckets):
+            tapped = taps[k](tuple(pleaves[i] for i in b.idx), tokens[k])
+            for j, i in enumerate(b.idx):
+                pleaves[i] = tapped[j]
+        return model.loss_fn(
+            jax.tree_util.tree_unflatten(ptree, pleaves), batch)
 
     def body(params, batch):
-        with manual_region():
-            (loss, metrics), grads = jax.value_and_grad(
-                model.loss_fn, has_aux=True)(params, batch)
-        metrics = dict(metrics)
-        grad_census = getattr(rt.run_cfg, "wire_dtype_auto", False)
-        gleaves, gtree = jax.tree_util.tree_flatten(grads)
-        out = list(gleaves)
-        for k, b in enumerate(bp.buckets):
-            wdt = jnp.dtype(b.key[1])
-            parts = [(gleaves[i].astype(jnp.float32) * scale).reshape(-1)
-                     for i in b.idx]
-            buf32 = jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+        if bp.overlap:
+            tokens = tuple(jnp.zeros((2,), jnp.float32) for _ in bp.buckets)
+            with manual_region():
+                (loss, metrics), (grads, tgrads) = jax.value_and_grad(
+                    loss_tapped, argnums=(0, 1), has_aux=True)(
+                        params, tokens, batch)
+            metrics = dict(metrics)
+            gleaves, gtree = jax.tree_util.tree_flatten(grads)
+            out = list(gleaves)       # bucketed leaves already exchanged
             if grad_census:
-                # dense-gradient magnitude census: per-bucket |g|inf and rms
-                # of what rides the wire, pre-cast. The scalars join the
-                # fused metrics psum below, so the host sees the replica-
-                # *mean* of the per-replica maxima — a profile signal for
-                # wire-dtype selection (sparsity.wire_dtype_hints), not an
-                # exact global max. Only traced when the hints have a
-                # consumer (wire_dtype_auto).
-                metrics[f"gbucket{k}_gmax"] = jnp.max(jnp.abs(buf32))
-                metrics[f"gbucket{k}_grms"] = jnp.sqrt(
-                    jnp.mean(jnp.square(buf32)))
-            buf = jax.lax.psum(buf32.astype(wdt), bp.batch_axes)  # ONE dense
-            off = 0                                               # collective
-            for i, sz in zip(b.idx, b.sizes):
-                out[i] = buf[off:off + sz].reshape(gleaves[i].shape)
-                off += sz
+                for k in range(len(bp.buckets)):
+                    metrics[f"gbucket{k}_gmax"] = tgrads[k][0]
+                    metrics[f"gbucket{k}_grms"] = tgrads[k][1]
+        else:
+            with manual_region():
+                (loss, metrics), grads = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(params, batch)
+            metrics = dict(metrics)
+            gleaves, gtree = jax.tree_util.tree_flatten(grads)
+            out = list(gleaves)
+            # pin every bucket collective strictly after the full
+            # backward — the deterministic contrast the overlap scheduling
+            # regression tests against. One element of EVERY gradient leaf
+            # rides each bucket's psum input (sliced off after): a data
+            # dependence the compiler cannot drop, unlike an
+            # optimization_barrier (expanded away pre-scheduling on CPU).
+            pin = jnp.stack([g.reshape(-1)[0].astype(jnp.float32)
+                             for g in gleaves])
+            for k, b in enumerate(bp.buckets):
+                ex, stats = _exchange_bucket(
+                    b, [gleaves[i] for i in b.idx], scale, bp, grad_census,
+                    pin=pin)
+                for j, i in enumerate(b.idx):
+                    out[i] = ex[j]
+                if stats is not None:
+                    metrics[f"gbucket{k}_gmax"] = stats[0]
+                    metrics[f"gbucket{k}_grms"] = stats[1]
         for i, g in enumerate(gleaves):
-            if i not in bucketed:
-                # sparse push already exchanged inside the lookup's VJP
-                # (replica-summed); only the loss-mean 1/N remains
-                out[i] = (g.astype(jnp.float32) * scale).astype(g.dtype)
+            if i in bucketed:
+                continue
+            # sparse push already exchanged inside the lookup's VJP
+            # (replica-summed); only the loss-mean 1/N remains
+            g32 = g.astype(jnp.float32) * scale
+            if grad_census and i in sparse_tables and g32.ndim >= 2:
+                # sparse row-buffer magnitude census: |g|inf and rms over
+                # the rows the push actually touched (zero rows excluded —
+                # the replica-sum inflates max and rms by the same factor,
+                # so the peak-to-rms pin ratio is unaffected)
+                name = sparse_tables[i]
+                rows = jnp.any(g32 != 0.0, axis=tuple(range(1, g32.ndim)))
+                width = g32.size // g32.shape[0]
+                nnz = jnp.maximum(jnp.sum(rows.astype(jnp.float32)), 1.0)
+                metrics[f"{name}_gmax"] = jnp.max(jnp.abs(g32))
+                metrics[f"{name}_grms"] = jnp.sqrt(
+                    jnp.sum(jnp.square(g32)) / (nnz * width))
+            out[i] = g32.astype(g.dtype)
         grads_out = jax.tree_util.tree_unflatten(gtree, out)
 
         # fused scalar reduction: loss + every scalar metric, one psum;

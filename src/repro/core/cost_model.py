@@ -26,25 +26,93 @@ step, and ``exchange_seconds`` is the shared α + β·b evaluator — the same
 model core/buckets.py uses to score fusing n dense all-reduces into k
 bucketed ones. RunConfig.comm_mode can still force the paper's baselines
 (ps / mpi).
+
+Hierarchical topology (Shi et al. §IV, arXiv:1711.05979): real meshes have
+two link tiers — fast intra-host ICI/NVLink (α₁, β₁ = ``Hardware.
+link_latency``/``link_bw``) and a slower inter-host fabric (α₂, β₂ =
+``inter_latency``/``inter_bw``). When ``MeshDims.hosts > 1`` and the inter
+constants are set, collectives that span hosts are priced at the inter tier
+(the slowest link governs a flat ring), and a dense all-reduce may instead
+ride a *two-level* schedule — intra-host reduce-scatter, inter-host
+all-reduce of the 1/L shard, intra-host all-gather:
+
+  t(two_level) = 2α₁ + α₂ + 2·(L−1)/L·b/β₁ + 2·(H−1)/H·(b/L)/β₂
+
+with H hosts and L local replicas per host — only b/L bytes ever cross the
+slow tier. ``choose_dense_schedule`` is the argmin the bucket planner uses;
+single-host (or inter constants unset) reduces every formula here exactly
+to the flat model, so the hierarchy is strictly additive.
 """
 from __future__ import annotations
 
+import json
+import os
 from dataclasses import dataclass, replace
 from typing import Optional
 
 from repro.utils.roofline import HW, Hardware
 
+# Hardware fields a fitted hw_profile.json (tools/profile_collectives.py
+# fit) may override; anything else in the file is ignored.
+_PROFILE_FIELDS = ("name", "link_bw", "link_latency", "inter_bw",
+                   "inter_latency")
+_profile_cache: dict = {}
+
+
+def load_hw_profile(path: str, hw: Optional[Hardware] = None) -> Hardware:
+    """Overlay a fitted α/β profile onto the hardware model. The file is a
+    flat JSON object; only ``_PROFILE_FIELDS`` keys apply (extra keys — the
+    fitter records its raw measurements — pass through untouched)."""
+    hw = hw or HW
+    key = (os.path.abspath(path), os.path.getmtime(path), hw)
+    if key in _profile_cache:
+        return _profile_cache[key]
+    with open(path) as f:
+        prof = json.load(f)
+    fields = {k: (str(v) if k == "name" else float(v))
+              for k, v in prof.items()
+              if k in _PROFILE_FIELDS and v is not None}
+    hw = replace(hw, **fields)
+    _profile_cache[key] = hw
+    return hw
+
 
 def resolve_hw(run_cfg=None, hw: Optional[Hardware] = None) -> Hardware:
     """The hardware model the planner prices against: the roofline HW,
-    with RunConfig.link_latency (when set) overriding the α term — the
-    config path for pinning the pure-byte Table-3 argmin (link_latency=0)
-    without mutating module state."""
+    overlaid with RunConfig.hw_profile (a fitted α₁β₁/α₂β₂ profile from
+    tools/profile_collectives.py) when set, then RunConfig.link_latency
+    (when set) overriding the intra α term — the config path for pinning
+    the pure-byte Table-3 argmin (link_latency=0) without mutating module
+    state."""
     hw = hw or HW
+    prof = getattr(run_cfg, "hw_profile", None) if run_cfg is not None else None
+    if prof:
+        hw = load_hw_profile(prof, hw)
     ll = getattr(run_cfg, "link_latency", None) if run_cfg is not None else None
     if ll is not None:
         hw = replace(hw, link_latency=float(ll))
     return hw
+
+
+def mesh_hosts(mesh) -> int:
+    """Host-group count among a mesh's devices — the H of the two-level
+    schedule. Real multi-host: the spread of ``device.process_index``.
+    Single-process simulation: the "pod" axis models the inter-host tier
+    (launch/mesh.make_production_mesh places it outermost), so its size
+    stands in for H when every device reports one process."""
+    if mesh is None:
+        return 1
+    procs = 1
+    try:
+        devs = mesh.devices.flat
+        procs = len({getattr(d, "process_index", 0) for d in devs})
+    except AttributeError:
+        pass                    # fake meshes in unit tests: no device array
+    if procs > 1:
+        return procs
+    if "pod" in getattr(mesh, "axis_names", ()):
+        return max(int(dict(mesh.shape)["pod"]), 1)
+    return 1
 
 
 @dataclass(frozen=True)
@@ -52,6 +120,7 @@ class MeshDims:
     model: int = 1
     data: int = 1
     pod: int = 1
+    hosts: int = 1                      # H: host groups among the replicas
 
     @property
     def replicas(self) -> int:          # N in the paper
@@ -60,6 +129,15 @@ class MeshDims:
     @property
     def chips(self) -> int:
         return self.model * self.data * self.pod
+
+    @property
+    def local_replicas(self) -> int:
+        """L: replicas per host (the intra-tier group of the two-level
+        schedule). Hosts that don't divide the replicas cleanly fall back
+        to 1 — the pricing then degrades to all-inter, never crashes."""
+        h = max(self.hosts, 1)
+        n = self.replicas
+        return n // h if h > 1 and n % h == 0 else (n if h <= 1 else 1)
 
 
 def dense_allreduce_bytes(b: float, dims: MeshDims) -> float:
@@ -126,18 +204,76 @@ def method_messages(method: str, dims: MeshDims) -> int:
     raise ValueError(f"unknown method {method!r}")
 
 
+def _tier_constants(hw: Hardware, tier: str) -> tuple[float, float]:
+    """(α, β) for a link tier. The inter tier only exists when both inter
+    constants are set; otherwise every tier prices at the intra link — the
+    exact single-tier reduction the flat model had."""
+    if tier == "inter" and hw.hierarchical:
+        return hw.inter_latency, hw.inter_bw
+    return hw.link_latency, hw.link_bw
+
+
+def span_tier(dims: MeshDims, hw: Hardware = HW) -> str:
+    """The tier a replica-spanning collective runs at: a flat ring that
+    crosses hosts is governed by its slowest link (inter); single-host
+    meshes never leave the intra fabric."""
+    return "inter" if dims.hosts > 1 and hw.hierarchical else "intra"
+
+
 def exchange_seconds(wire_bytes: float, messages: float,
-                     hw: Hardware = HW) -> float:
-    """The α + β·b transfer model: messages·α + bytes/bandwidth."""
-    return messages * hw.link_latency + wire_bytes / hw.link_bw
+                     hw: Hardware = HW, tier: str = "intra") -> float:
+    """The α + β·b transfer model: messages·α + bytes/bandwidth, at the
+    given link tier."""
+    alpha, beta = _tier_constants(hw, tier)
+    return messages * alpha + wire_bytes / beta
+
+
+def dense_schedule_seconds(b: float, dims: MeshDims,
+                           hw: Hardware = HW) -> dict:
+    """Execution-schedule candidates for ONE dense all-reduce of ``b``
+    bytes: the flat ring (priced at the tier it spans) and — on multi-host
+    meshes with fitted inter constants — the two-level
+    reduce-scatter → inter all-reduce → all-gather schedule, which moves
+    only b/L bytes across the slow tier (module docstring formula)."""
+    n = dims.replicas
+    out = {"ring": exchange_seconds(dense_allreduce_bytes(b, dims),
+                                    1 if n > 1 else 0, hw,
+                                    tier=span_tier(dims, hw))}
+    h, loc = dims.hosts, dims.local_replicas
+    if hw.hierarchical and h > 1 and loc > 1:
+        intra_bytes = 2.0 * (loc - 1) / loc * b
+        inter_bytes = 2.0 * (h - 1) / h * (b / loc)
+        out["two_level"] = (2.0 * hw.link_latency + hw.inter_latency
+                            + intra_bytes / hw.link_bw
+                            + inter_bytes / hw.inter_bw)
+    return out
+
+
+def choose_dense_schedule(b: float, dims: MeshDims,
+                          hw: Hardware = HW) -> tuple[str, dict]:
+    """Pick the execution schedule for one dense all-reduce (the bucket
+    planner's per-bucket argmin). Returns (schedule, seconds-by-schedule)."""
+    secs = dense_schedule_seconds(b, dims, hw)
+    return min(secs, key=secs.get), secs
 
 
 def method_seconds(*, b: float, alpha: float, dims: MeshDims,
                    hw: Hardware = HW) -> dict:
-    """Per-method step seconds for one parameter (the planner's argmin)."""
+    """Per-method step seconds for one parameter (the planner's argmin).
+
+    On a multi-host mesh with inter constants every method's collectives
+    span hosts, so messages and bytes price at the inter tier; the dense
+    all-reduce additionally gets the best of its execution schedules (a
+    two-level schedule can undercut the flat inter-tier ring). Single-host
+    (or no inter constants) reduces exactly to the flat α + β·b model."""
     bts = method_bytes(b, alpha, dims)
-    return {k: exchange_seconds(v, method_messages(k, dims), hw)
+    tier = span_tier(dims, hw)
+    secs = {k: exchange_seconds(v, method_messages(k, dims), hw, tier=tier)
             for k, v in bts.items()}
+    if tier == "inter":
+        secs["allreduce"] = min(
+            dense_schedule_seconds(b, dims, hw).values())
+    return secs
 
 
 def choose_method(*, b: float, sparse: bool, alpha: float, dims: MeshDims,

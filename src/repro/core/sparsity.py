@@ -333,8 +333,9 @@ def observed_census(profile: SparsityProfile, base: Census,
 
 def wire_dtype_hints(profile: SparsityProfile, bucket_plan: Any,
                      param_names: list, *, outlier_ratio: float,
-                     default: str = "bfloat16") -> dict:
-    """Profiled per-parameter wire-dtype selection from the dense-gradient
+                     default: str = "bfloat16",
+                     sparse_tables: Any = ()) -> dict:
+    """Profiled per-parameter wire-dtype selection from the gradient
     magnitude census.
 
     Each bucket's ``gbucket{i}_gmax`` / ``gbucket{i}_grms`` EMAs summarize
@@ -343,17 +344,33 @@ def wire_dtype_hints(profile: SparsityProfile, bucket_plan: Any,
     ~8-bit mantissa quantizes the small-magnitude bulk relative to the
     outliers, so its members keep float32 on the wire; everybody else rides
     ``default``. Returns {param name -> dtype str} for Census.wire_dtypes.
+
+    ``sparse_tables`` extends the same rule to sparse row-buffer pushes:
+    a table that kept its own exchange emits ``{table}_gmax`` /
+    ``{table}_grms`` scalars (core/buckets.py measures the densified
+    post-exchange grad over the rows the push touched), so an
+    outlier-prone table pins its row buffer to float32 too — without this
+    the sparse push could never earn a pin.
     """
     hints: dict[str, str] = {}
-    if bucket_plan is None:
-        return hints
-    for i, b in enumerate(bucket_plan.buckets):
-        gmax = profile.ema.get(f"gbucket{i}_gmax")
-        grms = profile.ema.get(f"gbucket{i}_grms")
+
+    def judge(key_prefix: str):
+        gmax = profile.ema.get(f"{key_prefix}_gmax")
+        grms = profile.ema.get(f"{key_prefix}_grms")
         if gmax is None or grms is None:
-            continue
-        choice = "float32" if gmax > outlier_ratio * max(grms, 1e-30) \
+            return None
+        return "float32" if gmax > outlier_ratio * max(grms, 1e-30) \
             else default
-        for j in b.idx:
-            hints[param_names[j]] = choice
+
+    if bucket_plan is not None:
+        for i, b in enumerate(bucket_plan.buckets):
+            choice = judge(f"gbucket{i}")
+            if choice is None:
+                continue
+            for j in b.idx:
+                hints[param_names[j]] = choice
+    for name in sparse_tables:
+        choice = judge(name)
+        if choice is not None:
+            hints[name] = choice
     return hints

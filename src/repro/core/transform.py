@@ -56,6 +56,7 @@ def _mesh_dims(mesh: Optional[Mesh], rules: MeshRules) -> cost_model.MeshDims:
         model=get("model") if "model" in mesh.axis_names else 1,
         data=get("data") if "data" in mesh.axis_names else 1,
         pod=get("pod") if "pod" in mesh.axis_names else 1,
+        hosts=cost_model.mesh_hosts(mesh),
     )
 
 

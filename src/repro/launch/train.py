@@ -58,6 +58,15 @@ def _parse():
     ap.add_argument("--wire-outlier-ratio", type=float, default=64.0,
                     help="per-bucket |g|inf/rms ratio above which --wire-"
                          "auto pins the bucket's parameters to f32")
+    ap.add_argument("--hw-profile", default=None,
+                    help="fitted hardware profile JSON (tools/"
+                         "profile_collectives.py fit): measured intra/inter "
+                         "α+β constants for the planner's argmin and the "
+                         "two-level schedule choice")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="pin bucket collectives after the full backward "
+                         "instead of issuing each at gradient readiness "
+                         "(the overlap regression baseline)")
     ap.add_argument("--replan-every", type=int, default=0,
                     help="profile->replan period in steps (0 = static plan)")
     ap.add_argument("--replan-warmup", type=int, default=2)
@@ -124,6 +133,7 @@ def main():
         table_zipf=table_zipf,
         wire_dtype_auto=args.wire_auto,
         wire_outlier_ratio=args.wire_outlier_ratio,
+        hw_profile=args.hw_profile, overlap=not args.no_overlap,
         bucket_bytes=args.bucket_bytes, embed_impl=args.embed_impl,
         learning_rate=args.lr, remat=args.remat,
         attention_impl=args.attention, seed=args.seed)

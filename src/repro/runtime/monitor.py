@@ -135,6 +135,13 @@ class StepMonitor:
         if self.exchange is not None:
             stats["n_collectives"] = self.exchange["n_collectives_dense"]
             stats["exchange"] = self.exchange
+            # topology-aware schedule surfacing: how many buckets ride the
+            # two-level inter-host schedule, and whether the exchange is
+            # overlap-issued inside the backward
+            if "n_two_level" in self.exchange:
+                stats["n_two_level"] = self.exchange["n_two_level"]
+            if "overlap" in self.exchange:
+                stats["overlap"] = self.exchange["overlap"]
         return stats
 
     def median(self) -> float:

@@ -237,7 +237,11 @@ class Trainer:
             census.wire_dtypes = wire_dtype_hints(
                 self.profile, live_plan.bucket_plan, names,
                 outlier_ratio=self.run_cfg.wire_outlier_ratio,
-                default=self.run_cfg.wire_dtype)
+                default=self.run_cfg.wire_dtype,
+                # tables that kept their own sparse exchange emit a
+                # name-keyed row-buffer census instead of riding a bucket
+                sparse_tables=[n for n, m in live_plan.table_methods.items()
+                               if m != "allreduce"])
         return census
 
     def remesh(self, new_mesh):

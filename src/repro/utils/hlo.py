@@ -277,6 +277,75 @@ def analyze_hlo(text: str, param_bytes: float = 0.0,
     return s
 
 
+# scheduled-module helpers --------------------------------------------------
+
+def _dot_bearing(comps: dict) -> set:
+    """Names of computations that (transitively) contain a dot — needed to
+    recognize matmul work after the backend fuses it away from a top-level
+    dot op (CPU lowers most dots into fusions / library custom-calls)."""
+    bearing: set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for name, comp in comps.items():
+            if name in bearing:
+                continue
+            has = any(op.kind in ("dot", "dot-general") for op in comp.ops)
+            if not has:
+                has = any(callee in bearing for callee, _ in comp.edges)
+            if has:
+                bearing.add(name)
+                changed = True
+    return bearing
+
+
+_MATMUL_CALL = re.compile(
+    r'custom_call_target="[^"]*(?:matmul|gemm|dot)[^"]*"', re.I)
+_CALLS_RE = re.compile(r"calls=\{?%?([\w.\-]+)")
+
+
+def is_scheduled(text: str) -> bool:
+    return "is_scheduled=true" in text
+
+
+def scheduled_events(text: str) -> list[dict]:
+    """Execution-order event stream of the ENTRY computation of a
+    *scheduled* HLO dump — once the module header says
+    ``is_scheduled=true``, ``compiled.as_text()`` prints ops in schedule
+    order, so text position IS execution position. Each event:
+    ``{pos, name, kind, collective: base-kind-or-None, bytes, grad_math}``.
+
+    ``grad_math`` catches matmul work however the backend lowered it: raw
+    dot/dot-general ops, fusions and while loops whose called computations
+    (transitively) contain a dot, and matmul/gemm library custom-calls —
+    scan-over-layers models run all their layer matmuls inside dot-bearing
+    while bodies, which appear as ONE event each. The overlap regression
+    (tests/test_perf_paths.py) uses this to assert the first bucket's
+    all-reduce is scheduled before the last backward-bearing loop."""
+    comps, entry, _ = parse_module(text)
+    events: list[dict] = []
+    if entry not in comps:
+        return events
+    bearing = _dot_bearing(comps)
+    for pos, op in enumerate(comps[entry].ops):
+        coll = None
+        for c in _COLLECTIVE_KINDS:
+            if op.kind == c or op.kind == c + "-start":
+                coll = c
+                break
+        grad_math = op.kind in ("dot", "dot-general")
+        if not grad_math and op.kind in ("fusion", "while", "call"):
+            grad_math = any(cm.group(1) in bearing
+                            for cm in _CALLED.finditer(op.line))
+        if not grad_math and op.kind == "custom-call":
+            grad_math = bool(_MATMUL_CALL.search(op.line))
+        events.append({"pos": pos, "name": op.name, "kind": op.kind,
+                       "collective": coll,
+                       "bytes": _shape_bytes(op.type_str) if coll else 0,
+                       "grad_math": grad_math})
+    return events
+
+
 # backwards-compatible helpers --------------------------------------------
 
 def parse_collectives(hlo_text: str) -> HloSummary:

@@ -28,9 +28,20 @@ class Hardware:
     name: str = "tpu-v5e"
     peak_flops: float = 197e12      # bf16 FLOP/s per chip
     hbm_bw: float = 819e9           # bytes/s per chip
-    link_bw: float = 50e9           # bytes/s per chip (ICI)
+    link_bw: float = 50e9           # bytes/s per chip (ICI, intra-host β₁)
     hbm_bytes: float = 16e9         # HBM capacity per chip
-    link_latency: float = 1e-6      # seconds per collective message (α)
+    link_latency: float = 1e-6      # s per collective message (intra α₁)
+    # inter-host tier (DCN): None = single-tier fabric — every collective is
+    # priced at (link_latency, link_bw) and the cost model reduces exactly to
+    # the flat α + β·b of the paper era. Set both (e.g. from a fitted
+    # hw_profile.json, tools/profile_collectives.py) to let the planner price
+    # two-level reduce-scatter→all-gather schedules on multi-host meshes.
+    inter_bw: float | None = None       # bytes/s per chip across hosts (β₂)
+    inter_latency: float | None = None  # s per cross-host message (α₂)
+
+    @property
+    def hierarchical(self) -> bool:
+        return self.inter_bw is not None and self.inter_latency is not None
 
 
 HW = Hardware()

@@ -64,6 +64,10 @@ def test_assign_groups_and_fills_by_bucket_bytes():
     assert [len(b.idx) for b in bp.buckets] == [4, 4, 2]
     assert bp.n_params == 10
     assert bp.wire_bytes == 10 * 16384
+    # reverse-topological fill: bucket 0 holds the LAST-forward parameters,
+    # whose gradients the backward produces first (overlap issue order)
+    assert bp.buckets[0].idx == (9, 8, 7, 6)
+    assert bp.buckets[-1].idx == (1, 0)
     # one flat buffer each, element counts preserved
     assert all(b.nbytes == sum(b.sizes) * 4 for b in bp.buckets)
 
@@ -73,9 +77,10 @@ def test_assign_single_bucket_when_under_cap():
               P(None, "model")) for i in range(6)]
     plan = fake_plan(leaves, MESH)
     bp = buckets.assign_buckets(plan, fake_rt(MESH))
-    # size-1 'model' shardings are physically identical -> one fused buffer
+    # size-1 'model' shardings are physically identical -> one fused buffer,
+    # members in reverse flatten order
     assert len(bp.buckets) == 1
-    assert bp.buckets[0].idx == tuple(range(6))
+    assert bp.buckets[0].idx == tuple(reversed(range(6)))
 
 
 def test_sparse_methods_keep_their_own_exchange():
@@ -125,3 +130,36 @@ def test_stats_charge_the_latency_model():
     assert s["n_collectives_unbucketed"] == 10
     saved = s["est_seconds_unbucketed"] - s["est_seconds"]
     assert saved == pytest.approx(9 * buckets.HW.link_latency)
+
+
+def test_two_level_schedule_on_multi_host_mesh(tmp_path):
+    prof = tmp_path / "hw.json"
+    prof.write_text('{"inter_bw": 12.5e9, "inter_latency": 10e-6}')
+    mesh = fake_mesh(pod=2, data=4, model=1)
+    # 1 MiB bucket: bandwidth-dominated, two-level wins (only b/L crosses
+    # the slow tier); 256 B bucket: latency-dominated, the extra 2α₁ of the
+    # two-level schedule loses to the flat ring
+    leaves = [leaf("big", (512, 512)), leaf("small", (8, 8))]
+    plan = fake_plan(leaves, mesh)
+    rt = fake_rt(mesh, batch=("pod", "data"), replicas=8,
+                 bucket_bytes=1 << 20)
+    rt.run_cfg.hw_profile = str(prof)
+    bp = buckets.assign_buckets(plan, rt)
+    assert bp.hosts == 2
+    by_name = {b.idx: b.schedule for b in bp.buckets}
+    assert by_name[(0,)] == "two_level"      # the 1 MiB buffer
+    assert by_name[(1,)] == "ring"           # the 256 B buffer
+    s = bp.stats()
+    assert s["n_two_level"] == 1 and s["hosts"] == 2 and s["overlap"]
+
+
+def test_single_host_mesh_keeps_flat_ring_even_with_profile(tmp_path):
+    prof = tmp_path / "hw.json"
+    prof.write_text('{"inter_bw": 12.5e9, "inter_latency": 10e-6}')
+    leaves = [leaf("w0", (512, 512))]
+    plan = fake_plan(leaves, MESH)
+    rt = fake_rt(MESH)
+    rt.run_cfg.hw_profile = str(prof)
+    bp = buckets.assign_buckets(plan, rt)
+    assert bp.hosts == 1
+    assert all(b.schedule == "ring" for b in bp.buckets)

@@ -106,6 +106,93 @@ def test_resolve_hw_link_latency_override():
     assert m == "mpi_gatherv"
 
 
+HIER = cm.Hardware(inter_bw=12.5e9, inter_latency=10e-6)
+
+
+def test_single_host_reduces_exactly_to_flat_model():
+    """The hierarchy is strictly additive: with hosts == 1 (or the inter
+    constants unset) every priced quantity equals the flat α + β·b model,
+    bit for bit."""
+    for b in (256.0, 1e5, 1e8):
+        for hw in (cm.HW, HIER):
+            dims = cm.MeshDims(model=1, data=8, hosts=1)
+            assert cm.span_tier(dims, hw) == "intra"
+            secs = cm.dense_schedule_seconds(b, dims, hw)
+            assert set(secs) == {"ring"}
+            assert secs["ring"] == cm.exchange_seconds(
+                cm.dense_allreduce_bytes(b, dims), 1)
+            assert cm.method_seconds(b=b, alpha=0.01, dims=dims, hw=hw) == \
+                cm.method_seconds(b=b, alpha=0.01, dims=dims, hw=cm.HW)
+        # multi-host but flat hardware: still the intra tier, still flat
+        multi = cm.MeshDims(model=1, data=8, hosts=2)
+        assert cm.span_tier(multi, cm.HW) == "intra"
+        assert cm.dense_schedule_seconds(b, multi, cm.HW) == \
+            cm.dense_schedule_seconds(b, cm.MeshDims(data=8), cm.HW)
+
+
+def test_two_level_schedule_crossover():
+    """Bandwidth-bound buckets prefer the two-level schedule (only b/L
+    bytes cross the slow tier); latency-bound ones keep the flat ring
+    (the extra 2α₁ launches dominate)."""
+    dims = cm.MeshDims(model=1, data=8, hosts=2)        # L = 4
+    big, secs_big = cm.choose_dense_schedule(1 << 20, dims, HIER)
+    small, secs_small = cm.choose_dense_schedule(256, dims, HIER)
+    assert big == "two_level" and small == "ring"
+    assert secs_big["two_level"] < secs_big["ring"]
+    # docstring formula, verbatim
+    b, h, loc = float(1 << 20), 2, 4
+    expect = (2 * HIER.link_latency + HIER.inter_latency
+              + 2 * (loc - 1) / loc * b / HIER.link_bw
+              + 2 * (h - 1) / h * (b / loc) / HIER.inter_bw)
+    assert secs_big["two_level"] == pytest.approx(expect, rel=1e-12)
+
+
+def test_inter_alpha_flips_a_method():
+    """The hierarchical model changes planner decisions, not just prices:
+    a sparse param whose gatherv (2 launches) beats one dense all-reduce
+    at the intra α loses the argmin once every message pays the inter α."""
+    dims1 = cm.MeshDims(model=1, data=8, hosts=1)
+    dims2 = cm.MeshDims(model=1, data=8, hosts=2)
+    costly = cm.Hardware(inter_bw=12.5e9, inter_latency=200e-6)
+    b, alpha = 2e6, 0.01
+    m1, _ = cm.choose_method(b=b, sparse=True, alpha=alpha, dims=dims1,
+                             comm_mode="hybrid", can_shard_rows=False,
+                             hw=costly)
+    m2, _ = cm.choose_method(b=b, sparse=True, alpha=alpha, dims=dims2,
+                             comm_mode="hybrid", can_shard_rows=False,
+                             hw=costly)
+    assert m1 == "mpi_gatherv"       # fewer bytes, cheap launches
+    assert m2 == "allreduce"         # inter α makes the 2nd launch too dear
+
+
+def test_local_replicas_and_mesh_hosts():
+    assert cm.MeshDims(data=8, hosts=2).local_replicas == 4
+    assert cm.MeshDims(data=8, hosts=1).local_replicas == 8
+    assert cm.MeshDims(data=8, hosts=3).local_replicas == 1   # non-divisible
+    fake = SimpleNamespace(shape={"pod": 2, "data": 4},
+                           axis_names=("pod", "data"))
+    assert cm.mesh_hosts(fake) == 2
+    assert cm.mesh_hosts(None) == 1
+    assert cm.mesh_hosts(SimpleNamespace(shape={"data": 8},
+                                         axis_names=("data",))) == 1
+
+
+def test_load_hw_profile_overlay(tmp_path):
+    prof = tmp_path / "hw_profile.json"
+    prof.write_text('{"link_bw": 45e9, "link_latency": 2e-6,'
+                    ' "inter_bw": 10e9, "inter_latency": 15e-6,'
+                    ' "fit_residual": 0.01}')       # extra keys ignored
+    rc = SimpleNamespace(hw_profile=str(prof), link_latency=None)
+    hw = cm.resolve_hw(rc)
+    assert hw.link_bw == 45e9 and hw.link_latency == 2e-6
+    assert hw.inter_bw == 10e9 and hw.inter_latency == 15e-6
+    assert hw.hierarchical
+    assert cm.HW.link_bw != 45e9                 # global untouched
+    # link_latency still wins over the profile (most specific last)
+    rc2 = SimpleNamespace(hw_profile=str(prof), link_latency=0.0)
+    assert cm.resolve_hw(rc2).link_latency == 0.0
+
+
 def test_method_messages_counts():
     dims = cm.MeshDims(model=8, data=4)
     assert cm.method_messages("allreduce", dims) == 1

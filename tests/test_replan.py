@@ -308,6 +308,18 @@ def test_wire_dtype_hints_from_magnitude_census():
                                      outlier_ratio=64.0) == {}
 
 
+def test_wire_dtype_hints_cover_sparse_row_buffers():
+    """A sparse table that kept its own exchange emits a name-keyed
+    row-buffer census and can earn an f32 pin like any bucket."""
+    prof = SparsityProfile()
+    prof.update({"embed_gmax": 10.0, "embed_grms": 0.01,      # outliers
+                 "enc_embed_gmax": 1.0, "enc_embed_grms": 0.5})  # tame
+    hints = sparsity.wire_dtype_hints(
+        prof, None, [], outlier_ratio=64.0,
+        sparse_tables=["embed", "enc_embed", "unseen"])
+    assert hints == {"embed": "float32", "enc_embed": "bfloat16"}
+
+
 def test_trainer_overflow_growth_and_monitor_surfacing(tiny_shape):
     """A workload burst overflows the capped dedupe buffer: the per-table
     dropped EMA shows up in the monitor stats, and the replan loop grows

@@ -36,6 +36,7 @@ def collect() -> dict:
         "process_count": jax.process_count(),
         "devices": [str(d) for d in jax.devices()[:8]],
         "remesh": _remesh_eligibility(),
+        "topology": _host_topology(),
         "xla_flags": os.environ.get("XLA_FLAGS", ""),
         "optional_deps": {
             name: importlib.util.find_spec(name) is not None
@@ -59,6 +60,26 @@ def _remesh_eligibility() -> dict:
         "hosts": jax.process_count(),
         "max_data_parallel": n,               # all-data mesh upper bound
         "can_shrink_data_axis": n >= 2,
+    }
+
+
+def _host_topology() -> dict:
+    """Detected host topology — the H and L of the two-level exchange
+    schedule (core/cost_model.py). Hierarchical pricing additionally needs
+    fitted inter-host α/β constants (tools/profile_collectives.py fit →
+    RunConfig.hw_profile); the default roofline HW is single-tier."""
+    import jax
+    from repro.utils.roofline import HW
+    per_host: dict[int, int] = {}
+    for d in jax.devices():
+        p = getattr(d, "process_index", 0)
+        per_host[p] = per_host.get(p, 0) + 1
+    sizes = sorted(set(per_host.values()))
+    return {
+        "hosts": len(per_host),
+        "local_devices_per_host": sizes,
+        "uniform": len(sizes) <= 1,
+        "hierarchical_hw": HW.hierarchical,
     }
 
 
@@ -113,6 +134,13 @@ def main() -> int:
     else:
         print("embed_impl=pallas: UNAVAILABLE "
               f"({pal.get('error', 'unknown')}) — use embed_impl=jnp")
+    topo = report["topology"]
+    tier = "fitted (two-level pricing active on multi-host meshes)" \
+        if topo["hierarchical_hw"] else \
+        "unset — run tools/profile_collectives.py fit for two-level pricing"
+    print(f"topology: hosts={topo['hosts']} "
+          f"local_devices={topo['local_devices_per_host']} "
+          f"uniform={topo['uniform']}  inter α/β: {tier}")
     rm = report["remesh"]
     print(f"elastic remesh: data axis can shrink="
           f"{rm['can_shrink_data_axis']} "

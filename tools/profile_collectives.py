@@ -1,46 +1,205 @@
-"""Dump the largest collectives (with op_name provenance) for one dry-run cell."""
+#!/usr/bin/env python
+"""Collective profiling: dump a cell's largest collectives, or fit the
+planner's α/β link constants from measured ring times.
+
+dump — the largest collectives (with op_name provenance) in one dry-run
+cell's post-SPMD HLO:
+
+    PYTHONPATH=src python tools/profile_collectives.py dump \
+        --arch seamless-m4t-medium --shape train_4k
+
+fit — time flat psums over a device mesh at several buffer sizes, fit the
+α + β·b line per link tier by least squares, and emit ``hw_profile.json``
+— the file ``RunConfig.hw_profile`` / ``launch/train.py --hw-profile``
+feeds back into ``core/cost_model.resolve_hw``, so the planner's argmin
+and the two-level-schedule choice run on measured constants instead of
+the roofline defaults:
+
+    PYTHONPATH=src python tools/profile_collectives.py fit \
+        --devices 8 --hosts 2 -o hw_profile.json
+
+With ``--hosts H > 1`` the device mesh gets a leading "pod" axis (the
+layout launch/mesh.make_production_mesh uses): psums over the intra axis
+fit (α₁, β₁) = ``link_latency``/``link_bw`` and psums over the pod axis
+fit (α₂, β₂) = ``inter_latency``/``inter_bw``. On a real multi-host world
+the pod axis crosses actual inter-host links and the fit measures them;
+on one process the "hosts" are simulated groups — physically meaningless
+timings, but a structurally valid profile for exercising the two-level
+machinery end to end.
+"""
+import argparse
+import json
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-import re, sys, argparse, collections
+import sys
+import time
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs import RunConfig, SHAPES, get_config
-from repro.launch.dryrun import lower_cell
-from repro.utils.hlo import parse_module, _multipliers, _shape_bytes, _COLLECTIVE_KINDS
 
-ap = argparse.ArgumentParser()
-ap.add_argument("--arch", required=True)
-ap.add_argument("--shape", required=True)
-ap.add_argument("--multi-pod", action="store_true")
-ap.add_argument("--remat", default="block")
-ap.add_argument("--comm-mode", default="hybrid")
-ap.add_argument("--top", type=int, default=25)
-args = ap.parse_args()
+def _build_parser():
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd")
+    dp = sub.add_parser("dump", help="largest collectives of one dry-run cell")
+    dp.add_argument("--arch", required=True)
+    dp.add_argument("--shape", required=True)
+    dp.add_argument("--multi-pod", action="store_true")
+    dp.add_argument("--remat", default="block")
+    dp.add_argument("--comm-mode", default="hybrid")
+    dp.add_argument("--top", type=int, default=25)
+    fp = sub.add_parser("fit", help="fit α/β link constants, emit a profile")
+    fp.add_argument("--devices", type=int, default=8,
+                    help="total devices (fake CPU devices off-accelerator)")
+    fp.add_argument("--hosts", type=int, default=1,
+                    help="host groups; > 1 adds a pod axis and fits the "
+                         "inter tier")
+    fp.add_argument("--sizes", type=int, nargs="+",
+                    default=[1 << 12, 1 << 16, 1 << 20, 1 << 23],
+                    help="buffer sizes (bytes) to time")
+    fp.add_argument("--iters", type=int, default=10,
+                    help="timed repetitions per size (min is kept)")
+    fp.add_argument("-o", "--out", default="hw_profile.json")
+    return ap
 
-compiled, rt, plan, model = lower_cell(
-    args.arch, args.shape, multi_pod=args.multi_pod,
-    run_cfg=RunConfig(comm_mode=args.comm_mode, capacity_mode="capped",
-                      remat=args.remat))
-text = compiled.as_text()
-comps, entry, _ = parse_module(text)
-mult, _ = _multipliers(comps, entry)
-rows = []
-for cname, comp in comps.items():
-    m = mult.get(cname, 0.0)
-    if not m: continue
-    for op in comp.ops:
-        kind = next((c for c in _COLLECTIVE_KINDS
-                     if op.kind in (c, c + "-start")), None)
-        if kind is None: continue
-        b = _shape_bytes(op.type_str) * m
-        mm = re.search(r'op_name="([^"]+)"', op.line)
-        src = mm.group(1) if mm else "?"
-        src = re.sub(r'jit\(\w+\)/', '', src)[:140]
-        rows.append((b, m, kind, op.type_str[:48], src))
-rows.sort(reverse=True)
-agg = collections.defaultdict(float)
-for b, m, kind, t, src in rows:
-    agg[kind] += b
-print({k: f"{v/1e9:.1f}GB" for k, v in agg.items()})
-for b, m, kind, t, src in rows[:args.top]:
-    print(f"{b/1e9:8.2f}GB x{int(m):4d} {kind:18s} {t:48s} {src}")
+
+def cmd_dump(args) -> int:
+    import collections
+    import re
+
+    from repro.configs import RunConfig
+    from repro.launch.dryrun import lower_cell
+    from repro.utils.hlo import (_COLLECTIVE_KINDS, _multipliers,
+                                 _shape_bytes, parse_module)
+
+    compiled, rt, plan, model = lower_cell(
+        args.arch, args.shape, multi_pod=args.multi_pod,
+        run_cfg=RunConfig(comm_mode=args.comm_mode, capacity_mode="capped",
+                          remat=args.remat))
+    text = compiled.as_text()
+    comps, entry, _ = parse_module(text)
+    mult, _ = _multipliers(comps, entry)
+    rows = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if not m:
+            continue
+        for op in comp.ops:
+            kind = next((c for c in _COLLECTIVE_KINDS
+                         if op.kind in (c, c + "-start")), None)
+            if kind is None:
+                continue
+            b = _shape_bytes(op.type_str) * m
+            mm = re.search(r'op_name="([^"]+)"', op.line)
+            src = mm.group(1) if mm else "?"
+            src = re.sub(r'jit\(\w+\)/', '', src)[:140]
+            rows.append((b, m, kind, op.type_str[:48], src))
+    rows.sort(reverse=True)
+    agg = collections.defaultdict(float)
+    for b, m, kind, t, src in rows:
+        agg[kind] += b
+    print({k: f"{v/1e9:.1f}GB" for k, v in agg.items()})
+    for b, m, kind, t, src in rows[:args.top]:
+        print(f"{b/1e9:8.2f}GB x{int(m):4d} {kind:18s} {t:48s} {src}")
+    return 0
+
+
+def _fit_line(xs, ys):
+    """Least squares t = α + b/β over (wire bytes, seconds) samples.
+    Returns (alpha seconds, beta bytes/s)."""
+    n = len(xs)
+    mx, my = sum(xs) / n, sum(ys) / n
+    sxx = sum((x - mx) ** 2 for x in xs)
+    sxy = sum((x - mx) * (y - my) for x, y in zip(xs, ys))
+    slope = sxy / sxx if sxx else 0.0
+    alpha = my - slope * mx
+    return max(alpha, 0.0), (1.0 / slope if slope > 0 else float("inf"))
+
+
+def _time_psum(mesh, axes, nbytes, iters):
+    """Min wall time of one jitted psum of an nbytes f32 buffer over the
+    given mesh axes (warm cache; min-of-iters rejects scheduler noise)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compat import P, shard_map
+
+    n = max(nbytes // 4, 1)
+    fn = jax.jit(shard_map(lambda x: jax.lax.psum(x, axes), mesh=mesh,
+                           in_specs=P(), out_specs=P(), check_vma=False))
+    x = jnp.ones((n,), jnp.float32)
+    fn(x).block_until_ready()                       # compile + warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(x).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def cmd_fit(args) -> int:
+    import jax
+
+    from repro.compat import make_mesh
+
+    ndev = args.devices
+    hosts = max(args.hosts, 1)
+    if ndev % hosts:
+        print(f"devices={ndev} not divisible by hosts={hosts}",
+              file=sys.stderr)
+        return 2
+    if jax.device_count() < ndev:
+        print(f"need {ndev} devices, have {jax.device_count()} "
+              "(re-run with fewer --devices)", file=sys.stderr)
+        return 2
+    local = ndev // hosts
+    mesh = make_mesh((hosts, local), ("pod", "data"))
+
+    def ring(n, b):                 # per-chip ring all-reduce wire bytes
+        return 2.0 * (n - 1) / n * b if n > 1 else 0.0
+
+    tiers = {"intra": (("data",), local)}
+    if hosts > 1:
+        tiers["inter"] = (("pod",), hosts)
+    prof: dict = {"devices": ndev, "hosts": hosts, "samples": {}}
+    for tier, (axes, n) in tiers.items():
+        xs, ys = [], []
+        for size in args.sizes:
+            t = _time_psum(mesh, axes, size, args.iters)
+            xs.append(ring(n, size))
+            ys.append(t)
+            prof["samples"][f"{tier}_{size}"] = t
+        alpha, beta = _fit_line(xs, ys)
+        if tier == "intra":
+            prof["link_latency"], prof["link_bw"] = alpha, beta
+        else:
+            prof["inter_latency"], prof["inter_bw"] = alpha, beta
+    with open(args.out, "w") as f:
+        json.dump(prof, f, indent=1)
+    print(f"wrote {args.out}:")
+    print(f"  intra: alpha={prof['link_latency']:.3e}s "
+          f"beta={prof['link_bw']:.3e}B/s")
+    if hosts > 1:
+        print(f"  inter: alpha={prof['inter_latency']:.3e}s "
+              f"beta={prof['inter_bw']:.3e}B/s")
+    print("use via RunConfig(hw_profile=...) or "
+          "launch/train.py --hw-profile")
+    return 0
+
+
+def main() -> int:
+    ap = _build_parser()
+    args = ap.parse_args()
+    if args.cmd is None:
+        ap.print_help()
+        return 2
+    if args.cmd == "fit":
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={args.devices}")
+    else:
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+    return cmd_dump(args) if args.cmd == "dump" else cmd_fit(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
