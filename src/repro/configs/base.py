@@ -220,6 +220,18 @@ class RunConfig:
     # bf16 rounding); everything else rides ``wire_dtype``.
     wire_dtype_auto: bool = False
     wire_outlier_ratio: float = 64.0
+    # fused bucket-apply (optim/optimizer.py update_fused): when the bucketed
+    # exchange is active, keep adamw/momentum state as flat per-bucket f32
+    # buffers and apply the update straight from the post-psum wire buffer —
+    # no unflatten -> per-param update -> reflatten round trip. Bit-identical
+    # to the per-param path at f32; eligibility also needs zero_stage 0 and
+    # opau (core/buckets.py fused_apply_eligible).
+    fused_apply: bool = True
+    # roofline-guided measured autotune of the Pallas embed_gather /
+    # embed_scatter_add block sizes (kernels/autotune.py): a small sweep per
+    # (table shape, dtype, backend) cached on disk; False = fixed full-row
+    # blocks. Tile choice never changes the math, only the schedule.
+    kernel_autotune: bool = False
 
 
 def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,

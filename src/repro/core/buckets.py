@@ -62,7 +62,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import P, shard_map
-from repro.core import cost_model
+from repro.core import cost_model, embedding
 from repro.core.plan import ParamPlan, Plan, plan_leaves
 from repro.core.runtime import manual_region
 from repro.utils.roofline import HW
@@ -108,6 +108,7 @@ class BucketPlan:
     hw: Any = None         # the hardware model the planner priced against
     hosts: int = 1         # H: host groups among the replicas
     overlap: bool = True   # issue each bucket's psum at grad readiness
+    n_sparse_push: int = 0  # gatherv tables with their own row-buffer push
 
     @property
     def dims(self) -> cost_model.MeshDims:
@@ -136,6 +137,9 @@ class BucketPlan:
                                if b.schedule == "two_level"),
             "hosts": self.hosts,
             "overlap": self.overlap,
+            # sparse row-buffer pushes issued at gradient readiness inside
+            # the backward (overlap=False defers them post-backward)
+            "n_overlapped_sparse": self.n_sparse_push if self.overlap else 0,
             "wire_bytes": self.wire_bytes,
             "bucket_bytes": self.bucket_bytes,
             "est_seconds": est,
@@ -261,14 +265,32 @@ def assign_buckets(plan: Plan, rt) -> Optional[BucketPlan]:
         wire_bytes=sum(b.nbytes for b in buckets),
         bucket_bytes=int(rt.run_cfg.bucket_bytes),
         hw=hw, hosts=hosts,
-        overlap=bool(getattr(rt.run_cfg, "overlap", True)))
+        overlap=bool(getattr(rt.run_cfg, "overlap", True)),
+        n_sparse_push=sum(1 for _, p in leaves
+                          if p.sparse and p.method == "mpi_gatherv"))
+
+
+def fused_apply_eligible(plan: Plan, rt) -> bool:
+    """Can the optimizer apply run bucket-natively (optim/optimizer.py
+    ``update_fused``)? Needs the bucketed exchange (flat post-psum buffers
+    exist), an optimizer with a fused path, replicated optimizer state
+    (zero_stage 0 — the flat buffer has no per-leaf dims to ZeRO-shard),
+    and OPAU on (the fused global-norm is the partial-sum form)."""
+    return bool(plan.bucket_plan is not None
+                and getattr(rt.run_cfg, "fused_apply", True)
+                and rt.run_cfg.optimizer in ("adamw", "momentum")
+                and rt.run_cfg.zero_stage == 0
+                and rt.run_cfg.opau)
 
 
 def plan_buckets(plan: Plan, rt) -> None:
     """Planner hook: (re)compute the bucket assignment for a plan in place.
     Runs after memory escalation so method flips to fsdp veto bucketing;
-    re-runs on every replan so the assignment tracks the live plan."""
+    re-runs on every replan so the assignment tracks the live plan. Also
+    stamps fused-apply eligibility — the optimizer-state layout is part of
+    the plan, so replans/remeshes migrate fused state deliberately."""
     plan.bucket_plan = assign_buckets(plan, rt)
+    plan.fused_apply = fused_apply_eligible(plan, rt)
 
 
 # ---------------------------------------------------------------------------
@@ -297,7 +319,9 @@ def _exchange_bucket(b: Bucket, gparts: list, scale: float, bp: BucketPlan,
     """The fused exchange for ONE bucket: flatten → 1/N scale → census →
     wire-dtype cast → psum (ring or two-level) → slice back. ``gparts`` are
     the members' local gradient leaves; returns (exchanged leaves cast back
-    to the member dtypes, (|g|inf, rms) census scalars or None).
+    to the member dtypes, (|g|inf, rms) census scalars or None, the
+    post-psum flat wire buffer — the fused bucket-apply path feeds it to
+    the optimizer directly, pin excluded).
 
     The census reads what rides the wire, pre-cast; downstream the scalars
     join the fused metrics psum so the host sees the replica-*mean* of the
@@ -328,7 +352,7 @@ def _exchange_bucket(b: Bucket, gparts: list, scale: float, bp: BucketPlan,
     for g, sz in zip(gparts, b.sizes):
         out.append(buf[off:off + sz].reshape(g.shape).astype(g.dtype))
         off += sz
-    return out, stats
+    return out, stats, buf[:off]
 
 
 def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
@@ -366,28 +390,51 @@ def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
     scale = 1.0 / bp.replicas
     bucketed = {i for b in bp.buckets for i in b.idx}
     grad_census = bool(getattr(rt.run_cfg, "wire_dtype_auto", False))
+    # fused bucket-apply: the optimizer wants the post-psum flat buffers
+    # themselves (optim/optimizer.py update_fused), so the step also
+    # returns them — under overlap they leave the backward through the tap
+    # tokens' cotangents (wire -> f32 is exact for every wire dtype)
+    want_bufs = bool(getattr(plan, "fused_apply", False))
     # sparse tables that kept their own exchange: the row-buffer census
     # targets these (their grads never transit a bucket, so without this
     # they could never earn an f32 wire pin)
     sparse_tables = {i: p.name for i, p in enumerate(_plan_leaves(plan))
                      if p.sparse and i not in bucketed}
+    # overlap=False defers each eligible gatherv table's push: the lookup
+    # VJP returns the locally-densified gradient (no collectives in the
+    # backward) and the exchange reruns here, post-backward, behind the
+    # same data-dependence pin as the dense buckets — the sparse half of
+    # the scheduling baseline. Eligible = the densify round-trip is exact
+    # in the table's param/wire dtypes (Runtime.sparse_defer_exact).
+    deferred = {}
+    if not bp.overlap:
+        deferred = {i: (p.name, rt.embed_ctx(p.name))
+                    for i, p in enumerate(_plan_leaves(plan))
+                    if p.sparse and p.method == "mpi_gatherv"
+                    and i not in bucketed
+                    and rt.sparse_defer_exact(p.name)}
 
     def _make_tap(b: Bucket):
+        total = sum(b.sizes)
         @jax.custom_vjp
         def tap(leaves, token):
             return leaves
         def fwd(leaves, token):
             return leaves, None
         def bwd(_, cts):
-            ex, stats = _exchange_bucket(b, list(cts), scale, bp,
-                                         grad_census)
+            ex, stats, buf = _exchange_bucket(b, list(cts), scale, bp,
+                                              grad_census)
             tok_ct = (jnp.stack(stats) if stats is not None
                       else jnp.zeros((2,), jnp.float32))
+            if want_bufs:
+                tok_ct = jnp.concatenate([tok_ct, buf.astype(jnp.float32)])
             return tuple(ex), tok_ct
         tap.defvjp(fwd, bwd)
-        return tap
+        return tap, 2 + (total if want_bufs else 0)
 
-    taps = [_make_tap(b) for b in bp.buckets]
+    taps_and_sizes = [_make_tap(b) for b in bp.buckets]
+    taps = [t for t, _ in taps_and_sizes]
+    token_sizes = [s for _, s in taps_and_sizes]
 
     def loss_tapped(params, tokens, batch):
         # taps must wrap the parameters *inside* the differentiated
@@ -402,8 +449,10 @@ def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
             jax.tree_util.tree_unflatten(ptree, pleaves), batch)
 
     def body(params, batch):
+        bufs = []
         if bp.overlap:
-            tokens = tuple(jnp.zeros((2,), jnp.float32) for _ in bp.buckets)
+            tokens = tuple(jnp.zeros((n,), jnp.float32)
+                           for n in token_sizes)
             with manual_region():
                 (loss, metrics), (grads, tgrads) = jax.value_and_grad(
                     loss_tapped, argnums=(0, 1), has_aux=True)(
@@ -411,6 +460,8 @@ def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
             metrics = dict(metrics)
             gleaves, gtree = jax.tree_util.tree_flatten(grads)
             out = list(gleaves)       # bucketed leaves already exchanged
+            if want_bufs:
+                bufs = [tgrads[k][2:] for k in range(len(bp.buckets))]
             if grad_census:
                 for k in range(len(bp.buckets)):
                     metrics[f"gbucket{k}_gmax"] = tgrads[k][0]
@@ -431,14 +482,23 @@ def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
             pin = jnp.stack([g.reshape(-1)[0].astype(jnp.float32)
                              for g in gleaves])
             for k, b in enumerate(bp.buckets):
-                ex, stats = _exchange_bucket(
+                ex, stats, buf = _exchange_bucket(
                     b, [gleaves[i] for i in b.idx], scale, bp, grad_census,
                     pin=pin)
                 for j, i in enumerate(b.idx):
                     out[i] = ex[j]
+                if want_bufs:
+                    bufs.append(buf.astype(jnp.float32))
                 if stats is not None:
                     metrics[f"gbucket{k}_gmax"] = stats[0]
                     metrics[f"gbucket{k}_grms"] = stats[1]
+            # deferred sparse push: rerun each eligible gatherv exchange
+            # here, behind the same pin, from the locally-densified grad
+            # and the dedupe buffer the forward smuggled out via metrics
+            for i, (name, ectx) in deferred.items():
+                uids = metrics.pop(f"{name}_uids")
+                gleaves[i] = embedding.deferred_push(
+                    gleaves[i], uids, ectx, pin=pin)
         for i, g in enumerate(gleaves):
             if i in bucketed:
                 continue
@@ -479,12 +539,22 @@ def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
                 mleaves[j] = jax.lax.psum(
                     x.astype(jnp.float32), bp.batch_axes) * scale
         metrics_out = jax.tree_util.tree_unflatten(mtree, mleaves)
+        if want_bufs:
+            # post-psum buffers are replica-identical; they leave the
+            # manual region replicated for the fused optimizer apply
+            return loss_out, metrics_out, grads_out, tuple(bufs)
         return loss_out, metrics_out, grads_out
 
+    out_specs = (P(), P(), pspecs)
+    if want_bufs:
+        out_specs = out_specs + (tuple(P() for _ in bp.buckets),)
     fn = shard_map(body, mesh=plan.mesh, in_specs=(pspecs, bspecs),
-                   out_specs=(P(), P(), pspecs), check_vma=False)
+                   out_specs=out_specs, check_vma=False)
 
     def value_and_grad_fn(params, batch):
+        if want_bufs:
+            loss, metrics, grads, bufs = fn(params, batch)
+            return (loss, metrics), grads, list(bufs)
         loss, metrics, grads = fn(params, batch)
         return (loss, metrics), grads
 

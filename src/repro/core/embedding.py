@@ -54,6 +54,13 @@ class EmbedCtx:
                                 # batch axes are live named axes (the
                                 # bucketed-exchange path, core/buckets.py)
     impl: str = "jnp"           # gather/scatter impl: jnp | pallas kernels
+    defer_push: bool = False    # overlap=False bucketed baseline: the VJP
+                                # returns the locally-densified gradient and
+                                # core/buckets.py reruns the gatherv push
+                                # post-backward (deferred_push)
+    gather_block: int = 0       # Pallas embed_gather lane tile (autotuned;
+                                # 0 = the fixed full-row block)
+    scatter_block: int = 0      # Pallas embed_scatter_add lane tile
 
     @property
     def model_shards(self) -> int:
@@ -138,7 +145,8 @@ def _gather_rows(table_shard, local_ids, ctx: EmbedCtx):
     """
     if ctx.impl == "pallas":
         from repro.kernels import ops
-        return ops.embed_gather(table_shard, local_ids)
+        return ops.embed_gather(table_shard, local_ids,
+                                block_e=ctx.gather_block)
     from repro.kernels import ref
     return ref.embed_gather_ref(table_shard, local_ids, 0)
 
@@ -154,7 +162,8 @@ def _scatter_rows(local_ids, rows, vs: int, ctx: EmbedCtx):
     """
     if ctx.impl == "pallas" and ctx.local_agg:
         from repro.kernels import ops
-        return ops.embed_scatter_add(local_ids, rows, vs)
+        return ops.embed_scatter_add(local_ids, rows, vs,
+                                     block_e=ctx.scatter_block)
     from repro.kernels import ref
     return ref.embed_scatter_add_ref(local_ids, rows, vs)
 
@@ -200,6 +209,13 @@ def _bwd_local(uids_row, inv_loc, d_out_loc, vs_shard, ctx: EmbedCtx):
     d_rows = d_rows[:cap].astype(ctx.wire_dtype)
 
     if ctx.method == "mpi_gatherv":
+        if ctx.defer_push:
+            # overlap=False bucketed baseline: no collectives here — return
+            # the locally-densified gradient; core/buckets.py re-extracts
+            # the deduped rows (deferred_push) and runs the identical
+            # all-gather exchange after the full backward, pinned.
+            return _scatter_rows(uids, d_rows, vs_shard,
+                                 _dc_replace(ctx, local_agg=False))
         # paper's MPI baseline: all-gather (ids, rows) over every replica.
         # Gathered ids duplicate across replicas -> jnp scatter-add (the
         # overwrite-style Pallas kernel needs unique ids), via local_agg=False
@@ -232,6 +248,91 @@ def _bwd_local(uids_row, inv_loc, d_out_loc, vs_shard, ctx: EmbedCtx):
         d = jax.lax.psum(d.astype(ctx.wire_dtype), ctx.batch_axes
                          ).astype(jnp.float32)
     return d
+
+
+def pin_after(x, dep):
+    """Return ``x`` bitwise-unchanged, with a scheduling dependence on
+    ``dep``: one element of ``x`` is re-written with itself at an index
+    derived from ``dep``'s first element. A dynamic self-write is exact for
+    every value (NaN and -0.0 included — nothing from ``dep`` ever mixes
+    into ``x``'s values) and the compiler cannot fold it away because the
+    index is data-dependent, so every consumer of the result orders after
+    ``dep`` is computed. Out-of-range indices are safe: dynamic slice and
+    update clamp identically."""
+    flat = x.reshape(-1)
+    idx = jax.lax.convert_element_type(dep.reshape(-1)[0], jnp.int32)
+    piece = jax.lax.dynamic_slice(flat, (idx,), (1,))
+    return jax.lax.dynamic_update_slice(flat, piece, (idx,)).reshape(x.shape)
+
+
+@jax.custom_vjp
+def _gate(table, act):
+    return table, act
+
+
+def _gate_fwd(table, act):
+    return (table, act), None
+
+
+def _gate_bwd(_, cts):
+    d_table, d_act = cts
+    # d_table is the already-exchanged push result (the lookup VJP ran the
+    # row-buffer collectives); pinning the activation cotangent on it makes
+    # the rest of the backward depend on the push having been issued
+    return d_table, pin_after(d_act, d_table)
+
+
+_gate.defvjp(_gate_fwd, _gate_bwd)
+
+
+def overlap_gate(table, activation):
+    """Overlap-schedule gate for an in-backward sparse push (Parallax §4:
+    sparse exchanges issue at gradient readiness, concurrent with the rest
+    of the backward). Thread a sparse table and an activation whose
+    cotangent feeds the *remaining* backward (e.g. the encoder output for a
+    decoder-side table) through this identity pair: in the backward, the
+    activation's cotangent gains a value-exact data dependence
+    (``pin_after``) on the table's pushed gradient, so the scheduler must
+    issue the push collectives before the remaining backward instead of
+    parking them after it (the push result otherwise feeds only the
+    optimizer, which constrains nothing). Bitwise no-op on every value in
+    both directions."""
+    return _gate(table, activation)
+
+
+def deferred_push(g_local, uids, ctx: EmbedCtx, pin=None):
+    """Post-backward gatherv push for a deferred table (``EmbedCtx.
+    defer_push``): re-extract the deduped wire rows from the locally-
+    densified gradient, all-gather (ids, rows) over the replicas, densify —
+    the exact exchange ``_bwd_local`` would have run in-backward. Exact
+    because the densify round-trip over unique ids is the identity (sentinel
+    rows read the appended zero row, and dedupe rows carried zeros there
+    anyway), and the wire cast chain replays bitwise when the table's param
+    dtype holds wire values exactly (Runtime.sparse_defer_exact gates this).
+
+    ``pin``: the overlap=False data-dependence vector — its sum rides an
+    extra row of the all-gathered buffer (dropped after), so the scheduler
+    cannot issue this collective before the backward has drained.
+    """
+    vs, e = g_local.shape
+    gpad = jnp.concatenate([g_local.astype(jnp.float32),
+                            jnp.zeros((1, e), jnp.float32)], axis=0)
+    rows = jnp.take(gpad, uids, axis=0).astype(ctx.wire_dtype)
+    cap = uids.shape[0]
+    if pin is not None:
+        pin_row = jnp.broadcast_to(jnp.sum(pin), (1, e))
+        rows = jnp.concatenate([rows, pin_row.astype(rows.dtype)], axis=0)
+    if ctx.batch_axes:
+        uids_all = jax.lax.all_gather(uids, ctx.batch_axes,
+                                      tiled=False).reshape(-1)
+        rows_all = jax.lax.all_gather(rows, ctx.batch_axes,
+                                      tiled=False).reshape(-1, rows.shape[0], e)
+        rows_all = rows_all[:, :cap].reshape(-1, e)
+    else:
+        uids_all, rows_all = uids, rows[:cap]
+    d = _scatter_rows(uids_all, rows_all, vs,
+                      _dc_replace(ctx, local_agg=False))
+    return d.astype(g_local.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -330,4 +431,13 @@ def lookup(table: jax.Array, ids: jax.Array, *, ctx: EmbedCtx,
     metrics = {f"{name}_rows": jnp.asarray(nrows, jnp.int32),
                f"{name}_dropped": jax.lax.stop_gradient(dropped),
                f"{name}_unique": jax.lax.stop_gradient(uniq)}
+    if ctx.defer_push:
+        # smuggle the dedupe buffer out to the post-backward deferred push
+        # (core/buckets.py pops this before the fused metrics psum). Same
+        # args as the VJP's dedupe -> identical buffer (and XLA CSEs the
+        # shared argsort).
+        flat = ids.reshape(-1).astype(jnp.int32)
+        uids, _, _, _ = _dedupe(flat, capacity, ctx.vocab_padded,
+                                ctx.local_agg)
+        metrics[f"{name}_uids"] = jax.lax.stop_gradient(uids)
     return out.astype(table.dtype), metrics

@@ -164,6 +164,13 @@ class Plan:
     embed_method: str = "ps"           # the "embed" table's exchange method
     bucket_plan: Any = None            # core/buckets.py BucketPlan (None =
                                        # per-tensor dense collectives)
+    fused_apply: bool = False          # optimizer reads the flat bucket
+                                       # buffers directly (fused m/v/EMA
+                                       # layout; optim/optimizer.py)
+    table_tiles: dict = field(default_factory=dict)  # name -> (gather_block,
+                                       # scatter_block) Pallas lane tiles from
+                                       # the kernel autotune cache (0 = the
+                                       # fixed full-row block)
     # ---- per-parameter planning (one record per sparse table) ----
     table_methods: dict = field(default_factory=dict)   # name -> method
     table_capacity: dict = field(default_factory=dict)  # name -> buffer rows

@@ -133,6 +133,37 @@ class Runtime:
 
     # ---- the Parallax sparse path (per-table: each sparse parameter can
     # carry its own method, capacity, and wire dtype in the plan) ----
+    def sparse_defer_exact(self, name: str = "embed") -> bool:
+        """Can this gatherv table's push be deferred post-backward without
+        changing the math? The deferred path densifies locally in the
+        table's param dtype and re-extracts the wire rows, so it is bitwise
+        only when the param dtype holds wire values exactly — and local
+        aggregation must be on (duplicate ids would double-count on
+        re-extract)."""
+        wire = self.wire_dtype
+        if self.plan is not None:
+            wire = self.plan.table_wire.get(name, wire)
+        return bool(self.run_cfg.local_agg
+                    and (jnp.dtype(wire) == self.param_dtype
+                         or self.param_dtype == jnp.dtype(jnp.float32)))
+
+    def sparse_push_overlapped(self, name: str = "embed") -> bool:
+        """Does this table's push exchange run inside the backward as part
+        of the overlap schedule? When true the model threads the push
+        result into the remaining backward (embedding.overlap_gate) so the
+        scheduler must issue the row-buffer collectives at gradient
+        readiness instead of parking them after the backward has drained —
+        the push otherwise feeds only the optimizer, which constrains
+        nothing."""
+        if self.mesh is None or not in_manual_region():
+            return False
+        if not getattr(self.run_cfg, "overlap", True) or not self.batch_axes:
+            return False
+        if self.plan is None or self.plan.bucket_plan is None:
+            return False
+        method = self.plan.table_methods.get(name, self.plan.embed_method)
+        return method in ("mpi_gatherv", "ps_gather", "ps")
+
     def embed_ctx(self, name: str = "embed") -> EmbedCtx:
         method, wire = "dense", self.wire_dtype
         if self.plan is not None:
@@ -140,6 +171,14 @@ class Runtime:
             wire = self.plan.table_wire.get(name, wire)
         elif self.mesh is not None:
             method = "ps" if self.run_cfg.comm_mode in ("hybrid", "ps") else "mpi_gatherv"
+        manual = in_manual_region()
+        defer = (manual and method == "mpi_gatherv"
+                 and not getattr(self.run_cfg, "overlap", True)
+                 and self.plan is not None
+                 and self.plan.bucket_plan is not None
+                 and self.sparse_defer_exact(name))
+        tiles = (self.plan.table_tiles.get(name, (0, 0))
+                 if self.plan is not None else (0, 0))
         return EmbedCtx(
             mesh=self.mesh,
             method=method,
@@ -149,8 +188,11 @@ class Runtime:
             wire_dtype=wire,
             local_agg=self.run_cfg.local_agg,
             exact=self.run_cfg.capacity_mode == "exact",
-            manual=in_manual_region(),
+            manual=manual,
             impl=self.run_cfg.embed_impl,
+            defer_push=defer,
+            gather_block=int(tiles[0]),
+            scatter_block=int(tiles[1]),
         )
 
     def embed_capacity_for(self, name: str = "embed") -> int:

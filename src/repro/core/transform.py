@@ -42,7 +42,8 @@ from repro.core.plan import (MeshRules, ParamPlan, Plan, add_fsdp,
 from repro.core.runtime import Runtime
 from repro.models.layers import ParamSpec
 from repro.models.model import Model, build_model
-from repro.optim.optimizer import Optimizer, TrainState, make_optimizer
+from repro.optim.optimizer import (Optimizer, TrainState, fuse_state,
+                                   is_fused, make_optimizer, unfuse_state)
 from repro.utils.tree import named_leaves, path_name as tree_path_name
 from repro.utils.roofline import HW
 
@@ -118,6 +119,15 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
         wire = _wire_for(name)
         if spec.sparse:
             capacity = census.capacity_for(name)
+            if method in ("allreduce", "dense") and rt.mesh is not None \
+                    and rt.run_cfg.capacity_mode == "capped":
+                # near-dense tables routed to the dense path dedupe once over
+                # the *global* batch (core/embedding.py lookup sizes its
+                # buffer by ids.size there), so the per-replica Zipf estimate
+                # misprices them — often undersized by ~N_replicas. Size
+                # exactly: a global dedupe can never exceed global tokens or
+                # the table's rows, and at that bound it never drops.
+                capacity = min(rt.shape_cfg.tokens, spec.shape[0])
             table_methods[name] = method if rt.mesh is not None else "dense"
             table_capacity[name] = capacity
             table_wire[name] = wire
@@ -213,18 +223,39 @@ def opt_shardings(plan: Plan):
 
 
 def state_shardings(plan: Plan, state_like: TrainState):
-    """TrainState shardings (moments follow opt_pspec; ema follows param)."""
+    """TrainState shardings (moments follow opt_pspec; ema follows param).
+
+    Fused bucket-apply states (optim/optimizer.py ``fuse_state``) hold each
+    moment as {"bucket": [flat f32 buffers], "leaf": per-param tree with
+    None at bucketed positions}: the buffers are post-psum replicated values
+    (fused apply needs zero_stage 0), so they shard as P(); the surviving
+    unbucketed leaves keep their planned pspecs, and the None placeholders
+    mirror over to the sharding tree (empty subtrees carry no sharding).
+    """
     if plan.mesh is None:
         return None
     ps = param_shardings(plan)
     os = opt_shardings(plan)
     rep = _ns(plan.mesh, P())
+
+    def moment(live, per_leaf):
+        if live is None:
+            return None
+        if isinstance(live, dict) and set(live) == {"bucket", "leaf"}:
+            shl, shdef = jax.tree_util.tree_flatten(per_leaf)
+            for b in plan.bucket_plan.buckets:
+                for i in b.idx:
+                    shl[i] = None
+            leaf = jax.tree_util.tree_unflatten(shdef, shl)
+            return {"bucket": [rep] * len(live["bucket"]), "leaf": leaf}
+        return per_leaf
+
     return TrainState(
         step=rep,
         params=ps,
-        m=os if state_like.m is not None else None,
-        v=os if state_like.v is not None else None,
-        ema=ps if state_like.ema is not None else None,
+        m=moment(state_like.m, os),
+        v=moment(state_like.v, os),
+        ema=moment(state_like.ema, ps),
     )
 
 
@@ -250,10 +281,30 @@ def make_train_step(model: Model, optimizer: Optimizer, rt: Runtime,
     With a bucket plan, loss+grad run inside core/buckets.py's manual
     exchange region: dense gradients arrive pre-aggregated over a few fused
     collectives (already at the wire dtype — the OPSW cast lives in the
-    exchange), and the optimizer consumes them per-tensor as always.
+    exchange), and the optimizer consumes them per-tensor as always — or,
+    when the plan stamps ``fused_apply``, bucket-natively: the exchange also
+    hands back the post-psum flat buffers and ``optimizer.update_fused``
+    applies straight from them against the fused state layout.
     """
     if plan.bucket_plan is not None:
+        if getattr(plan, "fused_apply", False) \
+                and optimizer.update_fused is None:
+            plan.fused_apply = False      # e.g. sgd: per-param only
         value_and_grad = buckets.make_bucketed_value_and_grad(model, rt, plan)
+        if plan.fused_apply:
+            bp = plan.bucket_plan
+
+            def train_step_fused(state: TrainState, batch: dict):
+                (loss, metrics), grads, bufs = value_and_grad(
+                    state.params, batch)
+                new_state, opt_metrics = optimizer.update_fused(
+                    state, grads, bufs, bp)
+                metrics = dict(metrics)
+                metrics.update(opt_metrics)
+                metrics["loss"] = loss
+                return new_state, metrics
+
+            return train_step_fused
     else:
         def value_and_grad(params, batch):
             out, grads = jax.value_and_grad(
@@ -307,11 +358,18 @@ def build_step(model: Model, optimizer: Optimizer, rt: Runtime, plan: Plan,
     or host arrays — e.g. the elastic remesh/replan paths) is the sharding
     template itself (no throwaway init) and is device_put onto the plan's
     shardings — a no-op when the placement is already current, a reshard
-    otherwise.
+    otherwise. Incoming state must be in the canonical per-param layout
+    (callers unfuse before handing it over); when the plan stamps
+    ``fused_apply`` the optimizer memory is re-laid out per bucket here.
     """
+    if getattr(rt.run_cfg, "kernel_autotune", False):
+        from repro.kernels import autotune
+        autotune.ensure_for_plan(plan, rt, model.specs())
     step_fn = make_train_step(model, optimizer, rt, plan)
     if state is None:
         state = optimizer.init(model.init(jax.random.key(seed)))
+    if getattr(plan, "fused_apply", False):
+        state = fuse_state(state, plan.bucket_plan)
     state_like = state
     if plan.mesh is not None:
         # every sharding below names the mesh explicitly, so the pjit path
@@ -340,6 +398,13 @@ def apply_replan(model: Model, optimizer: Optimizer, rt: Runtime,
     unchanged and through a host round-trip when they moved (the
     version-portable elastic path). Marks ``diff['rebuilt']``.
     """
+    old_plan = rt.plan
+    if is_fused(state):
+        # migrate fused optimizer memory through the canonical per-param
+        # layout: the OLD plan's bucket layout unfuses it, the new plan's
+        # (possibly regrouped) layout re-fuses inside build_step
+        state = unfuse_state(
+            state, old_plan.bucket_plan if old_plan is not None else None)
     rt.plan = new_plan            # model fns read the plan at trace time
     if diff["pspecs_changed"] and new_plan.mesh is not None:
         state = jax.tree.map(

@@ -27,14 +27,22 @@ def _gather_kernel(ids_ref, table_ref, out_ref, *, row_offset: int,
 
 
 def embed_gather(table_shard: jax.Array, ids: jax.Array, row_offset: int,
-                 *, interpret: bool = False) -> jax.Array:
-    """table_shard: (Vs, E); ids: (N,) global ids -> (N, E) owned rows."""
+                 *, block_e: int = 0, interpret: bool = False) -> jax.Array:
+    """table_shard: (Vs, E); ids: (N,) global ids -> (N, E) owned rows.
+
+    ``block_e`` tiles the feature dim: the grid becomes (N, E // block_e)
+    and each step DMAs a (1, block_e) slab, so wide rows pipeline through
+    VMEM instead of landing as one block. 0 (or a non-divisor) keeps the
+    fixed full-row block. Lane-dim rules apply: block_e must be a multiple
+    of 128 to tile cleanly (kernels/autotune.py only proposes such).
+    """
     vs, e = table_shard.shape
     n = ids.shape[0]
+    be = block_e if block_e and block_e < e and e % block_e == 0 else e
 
-    def table_index(i, ids_ref):
+    def table_index(i, j, ids_ref):
         local = ids_ref[i] - row_offset
-        return (jnp.clip(local, 0, vs - 1), 0)
+        return (jnp.clip(local, 0, vs - 1), j)
 
     kernel = functools.partial(_gather_kernel, row_offset=row_offset,
                                vs=vs, n_ids=n)
@@ -42,9 +50,9 @@ def embed_gather(table_shard: jax.Array, ids: jax.Array, row_offset: int,
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(n,),
-            in_specs=[pl.BlockSpec((1, e), table_index)],
-            out_specs=pl.BlockSpec((1, e), lambda i, ids_ref: (i, 0)),
+            grid=(n, e // be),
+            in_specs=[pl.BlockSpec((1, be), table_index)],
+            out_specs=pl.BlockSpec((1, be), lambda i, j, ids_ref: (i, j)),
         ),
         out_shape=jax.ShapeDtypeStruct((n, e), table_shard.dtype),
         interpret=interpret,

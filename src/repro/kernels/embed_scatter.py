@@ -34,14 +34,21 @@ def _scatter_kernel(ids_ref, rows_ref, zeros_ref, out_ref, *, vs: int):
 
 
 def embed_scatter_add(ids: jax.Array, rows: jax.Array, vs: int,
-                      *, interpret: bool = False) -> jax.Array:
-    """ids: (N,) local-space unique ids; rows: (N, E) -> (Vs, E) f32 grads."""
-    n, e = rows.shape
+                      *, block_e: int = 0, interpret: bool = False) -> jax.Array:
+    """ids: (N,) local-space unique ids; rows: (N, E) -> (Vs, E) f32 grads.
 
-    def out_index(i, ids_ref):
+    ``block_e`` tiles the feature dim exactly as in embed_gather: grid
+    (N, E // block_e), each step routes one (1, block_e) slab onto its
+    table row (dump-row routing for unowned ids is per-slab, so every slab
+    of an unowned row lands in the dump row). 0 / non-divisor = full row.
+    """
+    n, e = rows.shape
+    be = block_e if block_e and block_e < e and e % block_e == 0 else e
+
+    def out_index(i, j, ids_ref):
         lid = ids_ref[i]
         owned = jnp.logical_and(lid >= 0, lid < vs)
-        return (jnp.where(owned, lid, vs), 0)
+        return (jnp.where(owned, lid, vs), j)
 
     kernel = functools.partial(_scatter_kernel, vs=vs)
     zeros = jnp.zeros((vs + 1, e), jnp.float32)
@@ -49,10 +56,10 @@ def embed_scatter_add(ids: jax.Array, rows: jax.Array, vs: int,
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(n,),
-            in_specs=[pl.BlockSpec((1, e), lambda i, ids_ref: (i, 0)),
-                      pl.BlockSpec((1, e), out_index)],
-            out_specs=pl.BlockSpec((1, e), out_index),
+            grid=(n, e // be),
+            in_specs=[pl.BlockSpec((1, be), lambda i, j, ids_ref: (i, j)),
+                      pl.BlockSpec((1, be), out_index)],
+            out_specs=pl.BlockSpec((1, be), out_index),
         ),
         out_shape=jax.ShapeDtypeStruct((vs + 1, e), jnp.float32),
         # the zeros buffer IS the output storage: untouched rows stay zero

@@ -32,15 +32,16 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                                block_k=block_k, interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("row_offset",))
-def embed_gather(table_shard, ids, row_offset: int = 0):
-    return _eg.embed_gather(table_shard, ids, row_offset,
+@functools.partial(jax.jit, static_argnames=("row_offset", "block_e"))
+def embed_gather(table_shard, ids, row_offset: int = 0, *, block_e: int = 0):
+    return _eg.embed_gather(table_shard, ids, row_offset, block_e=block_e,
                             interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("vs",))
-def embed_scatter_add(ids, rows, vs: int):
-    return _es.embed_scatter_add(ids, rows, vs, interpret=_interpret())
+@functools.partial(jax.jit, static_argnames=("vs", "block_e"))
+def embed_scatter_add(ids, rows, vs: int, *, block_e: int = 0):
+    return _es.embed_scatter_add(ids, rows, vs, block_e=block_e,
+                                 interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

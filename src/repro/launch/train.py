@@ -63,6 +63,14 @@ def _parse():
                          "profile_collectives.py fit): measured intra/inter "
                          "α+β constants for the planner's argmin and the "
                          "two-level schedule choice")
+    ap.add_argument("--no-fused-apply", action="store_true",
+                    help="keep the per-param optimizer apply even when the "
+                         "plan is eligible for the bucket-native fused "
+                         "update (the fused-apply regression baseline)")
+    ap.add_argument("--kernel-autotune", action="store_true",
+                    help="measured block_e sweep for the Pallas embedding "
+                         "kernels, cached on disk (REPRO_AUTOTUNE_CACHE); "
+                         "no effect off --embed-impl pallas")
     ap.add_argument("--no-overlap", action="store_true",
                     help="pin bucket collectives after the full backward "
                          "instead of issuing each at gradient readiness "
@@ -134,6 +142,8 @@ def main():
         wire_dtype_auto=args.wire_auto,
         wire_outlier_ratio=args.wire_outlier_ratio,
         hw_profile=args.hw_profile, overlap=not args.no_overlap,
+        fused_apply=not args.no_fused_apply,
+        kernel_autotune=args.kernel_autotune,
         bucket_bytes=args.bucket_bytes, embed_impl=args.embed_impl,
         learning_rate=args.lr, remat=args.remat,
         attention_impl=args.attention, seed=args.seed)
@@ -175,6 +185,10 @@ def main():
                     f"{t}:{v:.1f}" for t, v in sorted(over.items()))
             if m.get("remeshes"):
                 extra += f"  remeshes {int(m['remeshes'])}"
+            if "apply_seconds" in m:
+                extra += f"  apply {m['apply_seconds'] * 1e6:.0f}us"
+            if m.get("n_overlapped_sparse"):
+                extra += f"  ovl-sparse {int(m['n_overlapped_sparse'])}"
             if "ckpt_error" in m:
                 extra += f"  CKPT-ERROR {m['ckpt_error']}"
             print(f"step {step:5d}  loss {m.get('loss', float('nan')):.4f}  "

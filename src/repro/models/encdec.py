@@ -145,6 +145,12 @@ def forward(params, batch, *, cfg, rt, cache=None, cache_len=None):
         return decode_stack(params, batch["tokens"], None, cfg=cfg, rt=rt,
                             cache=cache, cache_len=cache_len)
     enc_out = encode(params, batch["frames"], cfg=cfg, rt=rt)
+    if rt.sparse_push_overlapped("embed"):
+        # overlap schedule: gate the decoder table with the encoder output
+        # so the table's in-backward row push is issued before the encoder
+        # backward runs (emb.overlap_gate pins d_enc_out on the pushed grad)
+        table, enc_out = emb.overlap_gate(params["embed"], enc_out)
+        params = {**params, "embed": table}
     return decode_stack(params, batch["tokens"], enc_out, cfg=cfg, rt=rt)
 
 

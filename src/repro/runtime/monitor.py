@@ -48,6 +48,9 @@ class StepMonitor:
     ckpt_error: Optional[str] = None         # background checkpoint failure
     exchange: Optional[dict] = None          # bucketed-exchange accounting
                                              # (core/buckets.py stats)
+    apply_seconds: Optional[float] = None    # analytic optimizer-apply cost
+                                             # (state bytes / HBM bandwidth,
+                                             # fused-apply aware)
     overflow: Optional[dict] = None          # per-table embed_dropped EMA
                                              # (rows silently zeroed / step)
 
@@ -96,6 +99,13 @@ class StepMonitor:
         wire bytes, and per-step collective launches (None = per-tensor)."""
         self.exchange = dict(stats) if stats else None
 
+    def note_apply(self, seconds: Optional[float]):
+        """Record the analytic optimizer-apply cost for the live plan —
+        total HBM traffic of the update (params/moments/EMA read+write,
+        grads read, plus the unflatten->reflatten round trip the fused
+        bucket-apply skips) over the hardware model's bandwidth."""
+        self.apply_seconds = None if seconds is None else float(seconds)
+
     def stop(self, tokens: int = 0) -> dict:
         # a cleared _last means note_recovery dropped the in-flight sample
         # (the pause spans a restore, not a training step): keep the
@@ -142,6 +152,13 @@ class StepMonitor:
                 stats["n_two_level"] = self.exchange["n_two_level"]
             if "overlap" in self.exchange:
                 stats["overlap"] = self.exchange["overlap"]
+            # sparse row-buffer pushes issued at gradient readiness inside
+            # the backward (0 with overlap off or no gatherv tables)
+            if "n_overlapped_sparse" in self.exchange:
+                stats["n_overlapped_sparse"] = \
+                    self.exchange["n_overlapped_sparse"]
+        if self.apply_seconds is not None:
+            stats["apply_seconds"] = self.apply_seconds
         return stats
 
     def median(self) -> float:

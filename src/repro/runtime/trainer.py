@@ -51,12 +51,14 @@ from repro.core.runtime import Runtime
 from repro.core.sparsity import (SparsityProfile, observed_census,
                                  wire_dtype_hints)
 from repro.core.transform import (analyze, apply_replan, build_step,
-                                  estimate_census)
+                                  estimate_census, state_shardings)
 from repro.data.pipeline import Dataset
 from repro.launch.mesh import shrink_mesh
 from repro.models.model import build_model
-from repro.optim.optimizer import make_optimizer
+from repro.optim.optimizer import (fuse_state, is_fused, make_optimizer,
+                                   unfuse_state)
 from repro.runtime.monitor import StepMonitor
+from repro.utils.roofline import HW
 
 log = logging.getLogger("repro.trainer")
 
@@ -130,8 +132,45 @@ class Trainer:
         self.train_step, self.state, self.shardings = build_step(
             self.model, self.optimizer, self.rt, self.plan, state,
             seed=self.run_cfg.seed)
+        self._note_plan_costs()
+
+    def _note_plan_costs(self):
         self.monitor.note_exchange(
             self.plan.bucket_plan.stats() if self.plan.bucket_plan else None)
+        self.monitor.note_apply(self._apply_seconds_estimate())
+
+    def _apply_seconds_estimate(self) -> Optional[float]:
+        """Analytic optimizer-apply cost for the live plan: HBM bytes the
+        update moves over the hardware model's bandwidth. Params are read
+        and written, each f32 moment (and the EMA) is read and written,
+        gradients are read once; the per-param path under a bucket plan
+        additionally pays the unflatten->reflatten round trip over the
+        fused gradient buffers that the bucket-native apply skips."""
+        leaves = plan_leaves(self.plan.params)
+        if not leaves:
+            return None
+        itemsize = jnp.dtype(self.rt.param_dtype).itemsize
+        pbytes = sum(p.bytes for p in leaves)
+        f32b = sum(p.bytes // itemsize for p in leaves) * 4
+        n_moments = {"adamw": 2, "momentum": 1}.get(
+            self.run_cfg.optimizer, 0)
+        total = 3 * pbytes + 2 * n_moments * f32b
+        if self.run_cfg.ema_decay:
+            total += 2 * f32b
+        bp = self.plan.bucket_plan
+        if bp is not None and not getattr(self.plan, "fused_apply", False):
+            total += 2 * bp.wire_bytes
+        hw = bp.hw if bp is not None and bp.hw is not None else HW
+        return total / hw.hbm_bw
+
+    def _canonical_state(self):
+        """The live state in the canonical per-param layout. Checkpoints,
+        restore templates, and the remesh host round-trip never see the
+        fused bucket layout — it is a per-plan memory layout, rebuilt by
+        build_step, not portable state."""
+        if is_fused(self.state):
+            return unfuse_state(self.state, self.plan.bucket_plan)
+        return self.state
 
     # ------------------------------------------------------------------
     def _wire_pins(self, plan) -> dict:
@@ -167,13 +206,22 @@ class Trainer:
         last = latest_step(self.tcfg.ckpt_dir)
         if last is None:
             return
+        # checkpoints hold the canonical per-param layout: restore into a
+        # canonical template (with matching shardings), re-fuse afterwards
+        template = self._canonical_state()
+        shardings = state_shardings(self.plan, template) \
+            if self.mesh is not None else None
         self.state, self.step, extra = restore_checkpoint(
-            self.tcfg.ckpt_dir, self.state, shardings=self.shardings)
+            self.tcfg.ckpt_dir, template, shardings=shardings)
         saved = (extra or {}).get("plan")
         pins = (extra or {}).get("wire_pins", {})
         if (saved and saved != self.plan.tables()) or \
                 pins != self._wire_pins(self.plan):
             self._adopt_saved_plan(saved or {}, pins)
+        elif getattr(self.plan, "fused_apply", False):
+            self.state = fuse_state(self.state, self.plan.bucket_plan)
+            if self.shardings is not None:
+                self.state = jax.device_put(self.state, self.shardings)
         # recovery latency must not read as a straggler, and the in-flight
         # timing sample (if any) now spans a restore, not a step
         self.monitor.note_recovery()
@@ -215,8 +263,7 @@ class Trainer:
         self.plan = new_plan
         self.train_step, self.state, self.shardings = apply_replan(
             self.model, self.optimizer, self.rt, new_plan, self.state, diff)
-        self.monitor.note_exchange(
-            new_plan.bucket_plan.stats() if new_plan.bucket_plan else None)
+        self._note_plan_costs()
 
     def _observed_census(self, live_plan):
         """The census the replan loop runs on: the profile's per-table
@@ -253,7 +300,7 @@ class Trainer:
         re-price)."""
         host_state = jax.tree.map(
             lambda a: None if a is None else np.asarray(jax.device_get(a)),
-            self.state)
+            self._canonical_state())
         old_sig = _bucket_signature(self.plan)
         self._build(new_mesh, state=host_state, carry_plan=self.plan)
         if _bucket_signature(self.plan) != old_sig:
@@ -295,7 +342,7 @@ class Trainer:
             # the wait) must not abort the recovery itself — the live-state
             # remesh does not depend on it
             try:
-                self.ckpt.save_sync(self.step, self.state,
+                self.ckpt.save_sync(self.step, self._canonical_state(),
                                     extra=self._ckpt_extra())
             except Exception as e:
                 log.exception("pre-remesh checkpoint failed; continuing "
@@ -350,8 +397,7 @@ class Trainer:
             # old per-bucket magnitude EMAs mis-attributed — start fresh
             self.profile.reset_grad_census()
         self.monitor.note_replan()
-        self.monitor.note_exchange(
-            new_plan.bucket_plan.stats() if new_plan.bucket_plan else None)
+        self._note_plan_costs()
         return diff
 
     # ------------------------------------------------------------------
@@ -421,7 +467,7 @@ class Trainer:
                 # worth aborting a healthy run — surface it and try again
                 # next period (the final end-of-run save still raises)
                 try:
-                    self.ckpt.save(self.step, self.state,
+                    self.ckpt.save(self.step, self._canonical_state(),
                                    extra=self._ckpt_extra())
                 except Exception as e:
                     log.exception("checkpoint at step %d failed", self.step)
@@ -442,7 +488,7 @@ class Trainer:
                          metrics.get("loss", float("nan")),
                          stats["tokens_per_s"])
         if self.ckpt is not None:
-            self.ckpt.save(self.step, self.state,
+            self.ckpt.save(self.step, self._canonical_state(),
                            extra=self._ckpt_extra())
             self.ckpt.wait()
         return self.state

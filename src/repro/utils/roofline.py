@@ -30,6 +30,7 @@ class Hardware:
     hbm_bw: float = 819e9           # bytes/s per chip
     link_bw: float = 50e9           # bytes/s per chip (ICI, intra-host β₁)
     hbm_bytes: float = 16e9         # HBM capacity per chip
+    vmem_bytes: float = 16e6        # on-chip vector memory per core
     link_latency: float = 1e-6      # s per collective message (intra α₁)
     # inter-host tier (DCN): None = single-tier fabric — every collective is
     # priced at (link_latency, link_bw) and the cost model reduces exactly to
@@ -45,6 +46,38 @@ class Hardware:
 
 
 HW = Hardware()
+
+# TPU vector-lane width: Pallas blocks tile the last dim in multiples of this
+LANE = 128
+
+
+def kernel_tile_candidates(e: int, itemsize: int, hw: Hardware = HW,
+                           lane: int = LANE) -> list[int]:
+    """Feature-tile (block_e) candidates for the embedding kernels.
+
+    Multiples of the lane width that divide E exactly (anything else pads or
+    misaligns) and whose double-buffered block fits comfortably in VMEM.
+    0 — the fixed full-row block — is always a candidate, so a measured
+    argmin over this list can never lose to the untuned default.
+    """
+    cands = [0]
+    for be in range(lane, e, lane):
+        if e % be == 0 and 2 * be * itemsize <= hw.vmem_bytes:
+            cands.append(be)
+    return cands
+
+
+def embed_tile_seconds(n: int, e: int, block_e: int, itemsize: int,
+                       hw: Hardware = HW, step_overhead: float = 2e-7
+                       ) -> float:
+    """Roofline estimate for one embed gather/scatter sweep: the row bytes
+    always cross HBM once; tiling only adds grid steps (each with a fixed
+    issue/DMA-setup overhead) while shrinking the per-step VMEM block. The
+    autotuner uses this to *rank* candidates before measuring — the measured
+    argmin decides, the model just prunes the sweep."""
+    be = block_e if block_e and block_e < e and e % block_e == 0 else e
+    steps = n * (e // be)
+    return n * e * itemsize / hw.hbm_bw + steps * step_overhead
 
 
 @dataclass

@@ -1,11 +1,13 @@
-"""Optimizers vs hand-rolled references; OPAU clip semantics; EMA."""
+"""Optimizers vs hand-rolled references; OPAU clip semantics; EMA;
+fused bucket-apply layout + bit-exactness vs the per-param path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.buckets import Bucket, BucketPlan
 from repro.optim.optimizer import adamw, momentum, sgd, global_norm, \
-    clip_by_global_norm
+    clip_by_global_norm, bucket_segments, fuse_state, is_fused, unfuse_state
 
 
 def _params():
@@ -83,3 +85,89 @@ def test_ema_tracks_params():
     want = 0.5 * np.asarray(state.ema["a"]) + 0.5 * np.asarray(
         state2.params["a"], np.float32)
     np.testing.assert_allclose(np.asarray(state2.ema["a"]), want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused bucket-apply: state layout + bit-exactness vs the per-param path
+# ---------------------------------------------------------------------------
+
+def _bucket_plan():
+    """One bucket holding leaf 0 ('a', 32 elements); leaf 1 ('b/w') stays
+    unbucketed — both the bucket-native and the surviving per-leaf path of
+    update_fused are exercised."""
+    b = Bucket(key=("allreduce", "float32", ()), idx=(0,), sizes=(32,),
+               nbytes=32 * 4)
+    return BucketPlan(buckets=[b], batch_axes=("data",), replicas=1,
+                      n_params=1, wire_bytes=b.nbytes, bucket_bytes=1 << 20)
+
+
+def _assert_states_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_bucket_segments_layout():
+    bp = _bucket_plan()
+    assert bucket_segments(bp) == {0: (0, 0, 32)}
+
+
+def test_fuse_unfuse_roundtrip_exact():
+    opt = adamw(1e-2, ema_decay=0.5, clip_norm=None)
+    state = opt.init(_params())
+    bp = _bucket_plan()
+    fused = fuse_state(state, bp)
+    assert is_fused(fused) and not is_fused(state)
+    # bucketed leaf positions hold no buffer in the fused layout
+    assert fused.m["leaf"]["a"] is None
+    assert fused.m["leaf"]["b"]["w"] is not None
+    _assert_states_equal(state, unfuse_state(fused, bp))
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adamw(1e-2, b1=0.9, b2=0.95, weight_decay=0.1, clip_norm=1.0,
+                  ema_decay=0.9),
+    lambda: adamw(1e-2, weight_decay=0.0, clip_norm=None, ema_decay=0.0),
+    lambda: momentum(1e-1, mu=0.9, clip_norm=1.0, ema_decay=0.5),
+])
+def test_fused_update_bit_identical_f32(make_opt):
+    """update_fused replays update's cast/reduce chain op for op: at f32 the
+    two trajectories (params, moments, EMA, grad_norm) are bitwise equal
+    over multiple steps, including clipping and weight decay."""
+    opt = make_opt()
+    bp = _bucket_plan()
+    ref = opt.init(_params())
+    fused = fuse_state(opt.init(_params()), bp)
+    # jit both, as the train step does: XLA canonicalizes the reshape
+    # between a leaf and its flat bucket segment, so the clip-norm
+    # reduction associates identically (eager dispatch would differ at ULP)
+    upd = jax.jit(opt.update)
+    upd_fused = jax.jit(lambda s, g, bufs: opt.update_fused(s, g, bufs, bp))
+    for step in range(3):
+        g = _grads(scale=0.5 + step)            # crosses the clip threshold
+        bufs = [jnp.reshape(g["a"], (-1,)).astype(jnp.float32)]
+        ref, m_ref = upd(ref, g)
+        fused, m_fused = upd_fused(fused, g, bufs)
+        _assert_states_equal(ref, unfuse_state(fused, bp))
+        if "grad_norm" in m_ref:
+            assert float(m_ref["grad_norm"]) == float(m_fused["grad_norm"])
+
+
+def test_fused_wd_mask_segments():
+    """A param-wise weight-decay mask becomes a per-bucket segment vector;
+    fused and per-param agree bitwise under a non-uniform mask."""
+    mask = {"a": 0.0, "b": {"w": 1.0}}
+    opt = adamw(1e-2, weight_decay=0.2, clip_norm=None, wd_mask=mask)
+    bp = _bucket_plan()
+    ref, _ = opt.update(opt.init(_params()), _grads())
+    fused = fuse_state(opt.init(_params()), bp)
+    bufs = [jnp.reshape(_grads()["a"], (-1,)).astype(jnp.float32)]
+    fused, _ = opt.update_fused(fused, _grads(), bufs, bp)
+    _assert_states_equal(ref, unfuse_state(fused, bp))
+
+
+def test_sgd_has_no_fused_path():
+    assert sgd(0.1).update_fused is None
+    # and a stateless sgd state never reads as fused
+    assert not is_fused(sgd(0.1).init(_params()))

@@ -613,6 +613,55 @@ print("RESULT:" + json.dumps({
 
 
 @pytest.mark.distributed
+def test_dense_routed_table_capacity_sizes_for_global_dedupe():
+    """The capacity sizing flip: a sparse table routed to the *dense*
+    exchange (allreduce) dedupes once over the global batch in global
+    semantics, so under capped mode its buffer is sized exactly to
+    min(global tokens, rows) — a bound at which it can never drop — while
+    a sparse-routed sibling keeps the per-replica Zipf estimate (bounded
+    by local tokens)."""
+    code = """
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.core.transform import get_runner
+from repro.data import SyntheticLM
+
+cfg = reduced(get_config("parallax-nmt"), vocab=256)
+shape = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
+kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
+          compute_dtype="float32", wire_dtype="float32",
+          capacity_mode="capped", capacity_factor=1.5, link_latency=0.0,
+          table_zipf=(("embed", 1.3),), table_alpha=(("enc_embed", 0.99),))
+mesh = make_mesh((4, 2), ("data", "model"))
+with use_mesh(mesh):
+    run = get_runner(cfg, shape, RunConfig(**kw), mesh=mesh)
+    ds = SyntheticLM(cfg.vocab_size, 32, 8, is_encdec=True, src_zipf_a=0.0)
+    losses, dropped = [], {}
+    for i in range(3):
+        m = run.run(ds.batch(i))
+        losses.append(float(m["loss"]))
+        dropped = {k: float(v) for k, v in m.items()
+                   if k.endswith("_dropped")}
+print("RESULT:" + json.dumps({
+    "tables": run.plan.tables(), "losses": losses, "dropped": dropped,
+    "tokens": shape.tokens, "rows": run.rt.padded_vocab,
+    "local_tokens": shape.tokens // 4}))
+"""
+    res = distributed_run(code, devices=8, timeout=600)
+    tables = res["tables"]
+    assert tables["enc_embed"]["method"] == "allreduce", tables
+    assert tables["embed"]["method"] in ("ps", "ps_gather", "mpi_gatherv")
+    # dense-routed: exact global-dedupe sizing, not the Zipf estimate
+    want = min(res["tokens"], res["rows"])
+    assert tables["enc_embed"]["capacity"] == want, res
+    assert want > res["local_tokens"], res   # the flip genuinely mattered
+    # sparse-routed sibling keeps the per-replica capped estimate
+    assert tables["embed"]["capacity"] <= res["local_tokens"], res
+    # and at the exact bound the dense-routed table never drops
+    assert res["dropped"].get("enc_embed_dropped") == 0.0, res
+    assert all(np.isfinite(l) for l in res["losses"])
+
+
+@pytest.mark.distributed
 def test_wire_dtype_auto_replan_from_magnitude_census():
     """End-to-end profiled wire-dtype selection: on a DP mesh the bucketed
     step emits the per-bucket |g|inf/rms magnitude census; with an

@@ -43,9 +43,44 @@ def collect() -> dict:
             for name in OPTIONAL_DEPS
         },
         "embed_impl_pallas": _probe_pallas(),
+        "kernel_autotune": _autotune_status(),
+        "fused_apply": _fused_apply_eligibility(),
     }
     report["ok"] = bool(report["jax"]["supported"])
     return report
+
+
+def _autotune_status() -> dict:
+    """Embedding-kernel autotune cache state (kernels/autotune.py): cold
+    means the first --kernel-autotune run on this machine pays the measured
+    sweep (or keeps fixed tiles if REPRO_AUTOTUNE_NO_MEASURE=1)."""
+    from repro.kernels import autotune
+    st = autotune.cache_status()
+    st["measurement_allowed"] = autotune.measurement_allowed()
+    return st
+
+
+def _fused_apply_eligibility() -> dict:
+    """Would the default config get the fused bucket-apply here? Mirrors
+    core/buckets.fused_apply_eligible: needs a bucketed dense exchange
+    (bucket_bytes > 0, a data axis), an optimizer with a bucket-native
+    update (adamw | momentum), zero_stage 0, and opau."""
+    from repro.configs.base import RunConfig
+    cfg = RunConfig()
+    reasons = []
+    if not cfg.fused_apply:
+        reasons.append("fused_apply disabled")
+    if cfg.optimizer not in ("adamw", "momentum"):
+        reasons.append(f"optimizer {cfg.optimizer} has no fused update")
+    if cfg.zero_stage != 0:
+        reasons.append(f"zero_stage {cfg.zero_stage} shards the moments")
+    if not cfg.opau:
+        reasons.append("opau off (no aggregated update)")
+    if not cfg.bucket_bytes:
+        reasons.append("bucket_bytes 0 (per-tensor exchange)")
+    return {"eligible": not reasons, "blockers": reasons,
+            "optimizer": cfg.optimizer,
+            "requires": "bucketed dense exchange on a data-parallel mesh"}
 
 
 def _remesh_eligibility() -> dict:
@@ -134,6 +169,17 @@ def main() -> int:
     else:
         print("embed_impl=pallas: UNAVAILABLE "
               f"({pal.get('error', 'unknown')}) — use embed_impl=jnp")
+    at = report["kernel_autotune"]
+    print(f"kernel autotune: cache {at['state']} "
+          f"({at['entries']} entries, {at['backend_entries']} for this "
+          f"backend) at {at['path']}  "
+          f"measurement={'allowed' if at['measurement_allowed'] else 'OFF'}")
+    fa = report["fused_apply"]
+    if fa["eligible"]:
+        print(f"fused apply: eligible (optimizer={fa['optimizer']}; "
+              f"needs {fa['requires']})")
+    else:
+        print("fused apply: NOT eligible — " + "; ".join(fa["blockers"]))
     topo = report["topology"]
     tier = "fitted (two-level pricing active on multi-host meshes)" \
         if topo["hierarchical_hw"] else \
