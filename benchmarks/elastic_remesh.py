@@ -21,6 +21,21 @@ on the live state. Reported:
     sparse table exchanges as dense allreduce, and the shrink to N=3 flips
     it to mpi_gatherv (2(N-1)αb undercuts 2(N-1)/N·b exactly there).
 
+Two chaos phases close the elasticity loop:
+
+  * **flap/return** — the straggler is *attributed*: per-slice heartbeat
+    scalars ride the fused metrics psum, the monitor names the slow slice,
+    and the eviction drops that slice (not the last by convention). The
+    host then recovers and ``readmit()`` grows the mesh back at the
+    original grid position on probation. A control run applying the same
+    shrink/grow schedule manually shows **0.0** f32 loss divergence over
+    all steps — the whole flap is math-inert on the synchronous path;
+  * **jitter → bounded staleness** — intermittent contention too spiky to
+    evict anyone flips the sparse table to bounded-stale pushes (the step
+    applies the previous step's exchanged gradient; staleness asserted
+    in-graph against ``max_staleness``), and flips back — with an
+    automatic drain — once the jitter drains.
+
 Everything lands in ``BENCH_elastic.json`` next to the repo root.
 
     PYTHONPATH=src python -m benchmarks.elastic_remesh
@@ -28,6 +43,7 @@ Everything lands in ``BENCH_elastic.json`` next to the repo root.
 from __future__ import annotations
 
 import json
+import math
 import os
 
 from benchmarks.common import run_with_devices
@@ -103,6 +119,184 @@ print("RESULT:" + json.dumps(dict(
 """
 
 # ---------------------------------------------------------------------------
+# phase: flap/return — attributed evict -> probationary re-admission
+# ---------------------------------------------------------------------------
+
+_FLAP_CODE = """
+import time
+import numpy as np
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.data import SyntheticLM
+from repro.launch.mesh import grow_mesh, shrink_mesh
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+shape = ShapeConfig("bench", seq_len=32, global_batch=8, kind="train")
+kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
+          compute_dtype="float32", wire_dtype="float32",
+          capacity_mode="capped", capacity_factor=2.0, link_latency=0.0,
+          heartbeat=True)
+STEPS, SLOW_FROM, SLOW, SLEEP, RETURN_AFTER = 26, 4, 1, 0.3, 4
+
+def make_trainer(ckpt_dir, straggle):
+    ds = SyntheticLM(cfg.vocab_size, 32, 8)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    tcfg = TrainerConfig(total_steps=STEPS, ckpt_dir=ckpt_dir,
+                         ckpt_every=100, remesh_on_straggle=straggle,
+                         remesh_cooldown=20, min_data_parallel=2,
+                         probation_steps=50, probation_sustained=2)
+    t = Trainer(cfg, shape, RunConfig(**kw), tcfg, ds, mesh=mesh)
+    t.monitor.sustained = 3
+    t.monitor.min_samples = 4
+    return t, mesh
+
+# --- chaos run: slice SLOW straggles (wall clock + heartbeat), the monitor
+# attributes it, the trainer evicts it; RETURN_AFTER steps later the host
+# is healthy again and readmit() grows the mesh back on probation ---
+sched = {"evict_at": None, "readmit_at": None}
+t, mesh = make_trainer(None, True)
+orig_step = t.train_step
+def slow_step(state, batch):
+    if sched["evict_at"] is None and t.step >= SLOW_FROM:
+        time.sleep(SLEEP)      # the slow host gating every collective
+    return orig_step(state, batch)
+t.train_step = slow_step       # replaced by the rebuild at the evict
+def hb(step, n):
+    v = np.full((n,), 0.01, np.float32)
+    if sched["evict_at"] is None and step >= SLOW_FROM and SLOW < n:
+        v[SLOW] = 0.2          # ...and its heartbeat says so
+    return v
+t.heartbeat_fn = hb
+hist = []
+def cb(s, m):
+    hist.append(dict(step=s, loss=float(m["loss"]), tok_s=m["tokens_per_s"],
+                     straggler_slice=m.get("straggler_slice"),
+                     remeshes=int(m.get("remeshes", 0)),
+                     regrows=int(m.get("regrows", 0))))
+    if sched["evict_at"] is None and m.get("remeshes"):
+        sched["evict_at"] = s
+    elif sched["readmit_at"] is None and sched["evict_at"] is not None \\
+            and s == sched["evict_at"] + RETURN_AFTER:
+        assert t.readmit() is not None
+        sched["readmit_at"] = s
+with use_mesh(mesh):
+    t.run(on_metrics=cb)
+E, R = sched["evict_at"], sched["readmit_at"]
+assert E and R, sched
+assert not t._evicted          # the one evicted slice was consumed back
+
+# --- control run: no straggler, no escalation machinery — the SAME mesh
+# schedule applied by hand at the recorded steps. Bit-equal f32 losses
+# prove the whole flap (attributed evict -> probationary re-admission) is
+# math-inert on the synchronous path ---
+c, mesh = make_trainer(None, False)
+ctl = []
+import dataclasses
+segments = [(E, None), (R, "shrink"), (STEPS, "grow")]
+dropped = None
+for upto, action in segments:
+    if action == "shrink":
+        devs = np.asarray(c.mesh.devices)
+        dropped = np.take(devs, SLOW, axis=0)
+        c.remesh(shrink_mesh(c.mesh, drop_axis_index=SLOW))
+    elif action == "grow":
+        c.remesh(grow_mesh(c.mesh, dropped, insert_axis_index=SLOW))
+    c.tcfg = dataclasses.replace(c.tcfg, total_steps=upto)
+    with use_mesh(c.mesh):
+        c.run(on_metrics=lambda s, m: ctl.append(float(m["loss"])))
+
+losses = [h["loss"] for h in hist]
+tok = lambda lo, hi: float(np.median([h["tok_s"] for h in hist
+                                      if lo <= h["step"] <= hi]))
+print("RESULT:" + json.dumps(dict(
+    steps=STEPS, slow_from=SLOW_FROM, sleep_s=SLEEP, slow_slice=SLOW,
+    evict_at=E, readmit_at=R,
+    attributed=[h["straggler_slice"] for h in hist if h["step"] == E],
+    remeshes=t.monitor.remeshes, regrows=t.monitor.regrows,
+    probation=(t.monitor._probation or (None,))[0],
+    mesh_final=dict(t.mesh.shape),
+    tokens_per_s=dict(healthy=tok(2, SLOW_FROM - 1),
+                      straggled=tok(SLOW_FROM + 1, E),
+                      shrunk=tok(E + 2, R),
+                      regrown=tok(R + 2, STEPS)),
+    losses=losses, control_losses=ctl,
+    divergence=max(abs(a - b) for a, b in zip(losses, ctl)))))
+"""
+
+# ---------------------------------------------------------------------------
+# phase: jitter -> bounded-staleness fallback -> recovery
+# ---------------------------------------------------------------------------
+
+_JITTER_CODE = """
+import time
+import numpy as np
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.data import SyntheticLM
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+shape = ShapeConfig("bench", seq_len=32, global_batch=8, kind="train")
+rc = RunConfig(attention_impl="naive", remat="none", param_dtype="float32",
+               compute_dtype="float32", wire_dtype="float32",
+               link_latency=0.0, table_alpha=(("embed", 0.1),),
+               max_staleness=2)
+STEPS, JIT_FROM, JIT_TO, SLEEP = 26, 4, 14, 0.3
+ds = SyntheticLM(cfg.vocab_size, 32, 8)
+mesh = make_mesh((4, 1), ("data", "model"))
+tcfg = TrainerConfig(total_steps=STEPS, stale_on_jitter=True)
+t = Trainer(cfg, shape, rc, tcfg, ds, mesh=mesh)
+t.monitor.sustained = 8        # jitter must stay BELOW eviction
+t.monitor.min_samples = 6      # ...and one recompile outlier after a flip
+t.monitor.window = 10          # must not re-trigger; short window so the
+                               # exit hysteresis can drain within the run
+method0 = t.plan.table_methods["embed"]
+assert not t.plan.stale_tables
+
+def wrap():
+    orig = t.train_step
+    def jittery(state, batch):
+        # intermittent contention: every other step stalls — too spiky
+        # for the sustained-run eviction, plenty for the jitter ratio
+        if JIT_FROM <= t.step < JIT_TO and t.step % 2 == 0:
+            time.sleep(SLEEP)
+        return orig(state, batch)
+    jittery._wrapped = True
+    t.train_step = jittery
+wrap()
+hist = []
+def cb(s, m):
+    hist.append(dict(step=s, loss=float(m["loss"]), tok_s=m["tokens_per_s"],
+                     jitter=m.get("jitter_ratio"),
+                     stale=m.get("stale_mode"),
+                     age=m.get("staleness_age"),
+                     violation=m.get("staleness_violation"),
+                     flips=int(m.get("stale_flips", 0))))
+    if not getattr(t.train_step, "_wrapped", False):
+        wrap()                 # a stale flip rebuilt the step: re-arm
+with use_mesh(mesh):
+    t.run(on_metrics=cb)
+on_at = next((h["step"] for h in hist if h["flips"] == 1), -1)
+off_at = next((h["step"] for h in hist if h["flips"] == 2), -1)
+assert on_at > 0 and off_at > on_at, (on_at, off_at)
+stale_steps = [h for h in hist if on_at < h["step"] <= off_at]
+tok = lambda lo, hi: float(np.median([h["tok_s"] for h in hist
+                                      if lo <= h["step"] <= hi]))
+print("RESULT:" + json.dumps(dict(
+    steps=STEPS, jitter_from=JIT_FROM, jitter_to=JIT_TO, sleep_s=SLEEP,
+    method=method0, stale_on_at=on_at, stale_off_at=off_at,
+    stale_flips=t.monitor.stale_flips,
+    final_stale_tables=list(t.plan.stale_tables),
+    evictions=t.monitor.remeshes,
+    max_staleness_applied=max((h["age"] or 0) for h in stale_steps),
+    violations=sum((h["violation"] or 0) for h in stale_steps),
+    tokens_per_s=dict(healthy=tok(2, JIT_FROM - 1),
+                      jittery=tok(JIT_FROM + 1, on_at),
+                      stale=tok(on_at + 2, off_at),
+                      recovered=tok(off_at + 2, STEPS)),
+    losses=[h["loss"] for h in hist])))
+"""
+
+# ---------------------------------------------------------------------------
 # phase 2: the N-dependent method flip across a remesh
 # ---------------------------------------------------------------------------
 
@@ -164,6 +358,52 @@ def main():
         "evicting the slow slice did not recover throughput"
     assert res["latest_ckpt"] == res["steps"]
 
+    flap = run_with_devices(_FLAP_CODE, devices=8)
+    fp = flap["tokens_per_s"]
+    print(f"flap run: slice {flap['slow_slice']} straggles from step "
+          f"{flap['slow_from']}, heartbeat-attributed evict at step "
+          f"{flap['evict_at']} (attributed slice "
+          f"{flap['attributed']}), readmit at step {flap['readmit_at']} "
+          f"-> final mesh {flap['mesh_final']}")
+    print(f"tokens/s: healthy {fp['healthy']:.0f} -> straggled "
+          f"{fp['straggled']:.0f} -> shrunk {fp['shrunk']:.0f} -> "
+          f"regrown {fp['regrown']:.0f}")
+    print(f"f32 loss divergence vs manual-schedule control run: "
+          f"{flap['divergence']:.1e} over all {flap['steps']} steps "
+          f"(evict + probationary re-admission are math-inert)")
+    assert flap["attributed"] == [flap["slow_slice"]], \
+        "the heartbeat attribution did not name the injected straggler"
+    assert flap["remeshes"] == 1 and flap["regrows"] == 1, flap
+    assert flap["mesh_final"] == {"data": 4, "model": 2}, flap["mesh_final"]
+    assert flap["probation"] == flap["slow_slice"], \
+        "readmit() did not arm a probation window on the returned slice"
+    assert flap["divergence"] == 0.0, \
+        "the flap machinery perturbed the synchronous trajectory"
+    assert fp["shrunk"] > 2.0 * fp["straggled"], \
+        "evicting the attributed slice did not recover throughput"
+
+    jit = run_with_devices(_JITTER_CODE, devices=8)
+    jp = jit["tokens_per_s"]
+    print(f"jitter run: {jit['method']} table flips stale at step "
+          f"{jit['stale_on_at']}, back to synchronous at step "
+          f"{jit['stale_off_at']} (max staleness applied "
+          f"{jit['max_staleness_applied']:.0f} <= bound 2, "
+          f"violations {jit['violations']:.0f})")
+    print(f"tokens/s: healthy {jp['healthy']:.0f} -> jittery "
+          f"{jp['jittery']:.0f} -> stale {jp['stale']:.0f} -> recovered "
+          f"{jp['recovered']:.0f}")
+    assert jit["method"] == "mpi_gatherv", jit["method"]
+    assert jit["stale_flips"] == 2, \
+        f"expected exactly one on+off flip pair, got {jit['stale_flips']}"
+    assert jit["evictions"] == 0, "jitter must not escalate to an eviction"
+    assert 1 <= jit["max_staleness_applied"] <= 2, jit
+    assert jit["violations"] == 0, \
+        "the in-graph staleness bound was violated"
+    assert not jit["final_stale_tables"], \
+        "the run did not recover to the synchronous plan"
+    assert all(math.isfinite(x) for x in jit["losses"]), \
+        "stale pushes diverged"
+
     two = run_with_devices(_REPRICE_CODE, devices=8)
     print(f"re-pricing flip: embed exchanged as {two['method_n4']} at N=4, "
           f"{two['method_n3']} at N=3 (2(N-1)alpha*b vs 2(N-1)/N*b at "
@@ -172,9 +412,11 @@ def main():
         ("allreduce", "mpi_gatherv"), two
 
     with open(OUT, "w") as f:
-        json.dump(dict(chaos=res, reprice=two), f, indent=2)
-    print(f"OK: straggle -> checkpoint -> shrink -> re-price -> resume; "
-          f"wrote {os.path.normpath(OUT)}")
+        json.dump(dict(chaos=res, flap=flap, jitter=jit, reprice=two),
+                  f, indent=2)
+    print(f"OK: straggle -> checkpoint -> shrink -> re-price -> resume, "
+          f"flap -> attributed evict -> probationary re-admit, "
+          f"jitter -> bounded-stale -> drain; wrote {os.path.normpath(OUT)}")
 
 
 if __name__ == "__main__":

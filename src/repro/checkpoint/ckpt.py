@@ -156,11 +156,24 @@ def gc_checkpoints(ckpt_dir: str, keep: int = 3) -> None:
 
 
 class AsyncCheckpointer:
-    """Snapshot-to-host + background write; at most one write in flight."""
+    """Snapshot-to-host + background write; at most one write in flight.
 
-    def __init__(self, ckpt_dir: str, keep: int = 3):
+    Transient background-write failures (a filesystem hiccup, a racing GC)
+    are retried up to ``retries`` times with exponential backoff
+    (``backoff * 2**attempt`` seconds) before the failure is surfaced —
+    previously a failed write silently waited for the next periodic save,
+    widening the restore gap by up to ``ckpt_every`` steps. The cumulative
+    retry count is ``total_retries`` (surfaced as ``stats ckpt_retries``
+    through the monitor), so a flaky checkpoint path is visible even when
+    every write eventually lands."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, retries: int = 3,
+                 backoff: float = 0.05):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
+        self.retries = retries
+        self.backoff = backoff
+        self.total_retries = 0
         self._thread: Optional[threading.Thread] = None
         self.last_committed: Optional[int] = None
         self._error: Optional[BaseException] = None
@@ -209,12 +222,22 @@ class AsyncCheckpointer:
             state)
 
         def work():
-            try:
-                save_checkpoint(self.ckpt_dir, step, host_state, extra)
-                gc_checkpoints(self.ckpt_dir, self.keep)
-                self.last_committed = step
-            except BaseException as e:  # surfaced on next wait()
-                self._error = e
+            for attempt in range(self.retries + 1):
+                try:
+                    save_checkpoint(self.ckpt_dir, step, host_state, extra)
+                    gc_checkpoints(self.ckpt_dir, self.keep)
+                    self.last_committed = step
+                    return
+                except BaseException as e:
+                    if attempt >= self.retries:
+                        self._error = e   # surfaced on next wait()
+                        return
+                    self.total_retries += 1
+                    log.warning(
+                        "background checkpoint write of step %d failed "
+                        "(%s: %s); retry %d/%d", step, type(e).__name__, e,
+                        attempt + 1, self.retries)
+                    time.sleep(self.backoff * (2 ** attempt))
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()

@@ -232,6 +232,21 @@ class RunConfig:
     # (table shape, dtype, backend) cached on disk; False = fixed full-row
     # blocks. Tile choice never changes the math, only the schedule.
     kernel_autotune: bool = False
+    # per-host heartbeat scalars riding the fused metrics psum: each data
+    # slice contributes a host-stamped timing value decoded host-side for
+    # straggler *attribution* (runtime/monitor.py names the slow process
+    # instead of dropping the last slice by convention). Adds one batch
+    # entry ("_heartbeat") and D scalar metrics; off by default so
+    # non-Trainer callers keep their input pytrees.
+    heartbeat: bool = False
+    # bounded-staleness sparse fallback (the DeepSpark-style degraded mode,
+    # applied per-table through the plan): sparse tables flipped to
+    # ``stale`` apply s-step-old exchanged gradients through a staleness
+    # buffer in the train state while dense buckets stay synchronous.
+    # 0 disables the machinery entirely (no buffer in the state); >0 bounds
+    # the age any applied sparse gradient may reach (asserted in-graph via
+    # the ``staleness_violation`` metric).
+    max_staleness: int = 0
 
 
 def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,

@@ -387,6 +387,11 @@ def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
         if len(v.shape) else P()
         for k, v in model.input_specs().items()
     }
+    heartbeat = bool(getattr(rt.run_cfg, "heartbeat", False))
+    if heartbeat:
+        # one scalar per replica slot, sharded so each replica holds only
+        # its own — the attribution channel rides the fused metrics psum
+        bspecs["_heartbeat"] = P(bp.batch_axes)
     scale = 1.0 / bp.replicas
     bucketed = {i for b in bp.buckets for i in b.idx}
     grad_census = bool(getattr(rt.run_cfg, "wire_dtype_auto", False))
@@ -449,6 +454,8 @@ def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
             jax.tree_util.tree_unflatten(ptree, pleaves), batch)
 
     def body(params, batch):
+        batch = dict(batch)
+        hb = batch.pop("_heartbeat", None)
         bufs = []
         if bp.overlap:
             tokens = tuple(jnp.zeros((n,), jnp.float32)
@@ -520,6 +527,18 @@ def make_bucketed_value_and_grad(model, rt, plan: Plan) -> Callable:
             out[i] = g32.astype(g.dtype)
         grads_out = jax.tree_util.tree_unflatten(gtree, out)
 
+        if hb is not None:
+            # per-host straggler attribution (runtime/monitor.py): each
+            # replica one-hot-encodes its own heartbeat scalar at N× so the
+            # replica-*mean* the fused psum computes decodes back to slot
+            # j's raw value — the channel adds D scalars to the existing
+            # reduction, zero extra collectives
+            slot = jnp.zeros((), jnp.int32)
+            for a in bp.batch_axes:
+                slot = slot * plan.mesh.shape[a] + jax.lax.axis_index(a)
+            for j in range(bp.replicas):
+                metrics[f"heartbeat{j}"] = hb[0] * jnp.where(
+                    slot == j, float(bp.replicas), 0.0)
         # fused scalar reduction: loss + every scalar metric, one psum;
         # rank>=1 metric leaves (none today) pmean individually — returning
         # them raw through out_specs=P() would silently pass one device's

@@ -311,6 +311,28 @@ def choose_method(*, b: float, sparse: bool, alpha: float, dims: MeshDims,
     raise ValueError(f"unknown comm_mode {comm_mode!r}")
 
 
+def stale_push_seconds(*, b: float, alpha: float, method: str,
+                       dims: MeshDims, hw: Optional[Hardware] = None) -> dict:
+    """Price one sparse table's push under the bounded-staleness fallback.
+
+    The stale mode changes *scheduling*, not volume: the row-buffer
+    exchange still runs every step (replica consistency — every replica
+    must buffer the same aggregate), but the applied gradient no longer
+    gates this step's optimizer update, so the exchange overlaps the next
+    step's forward instead of sitting on the critical path. Returned:
+
+      ``sync_s``      the synchronous critical-path cost (method_seconds)
+      ``stale_s``     the wire seconds still paid, off the critical path
+      ``critical_s``  what remains ON the path in stale mode (0.0 — the
+                      whole exchange is deferrable once nothing waits on it)
+
+    The trainer logs this alongside a stale flip so the jitter fallback's
+    expected win is visible before the throughput confirms it."""
+    hw = hw or HW
+    sync = method_seconds(b=b, alpha=alpha, dims=dims, hw=hw)[method]
+    return {"sync_s": sync, "stale_s": sync, "critical_s": 0.0}
+
+
 def pick_dense_strategy(cfg, shape, dims: MeshDims, hbm_bytes: float = 16e9,
                         param_dtype_bytes: int = 2) -> str:
     """Choose tp(+SP) vs dp(ZeRO-3 over every axis) for dense params.

@@ -61,6 +61,13 @@ class EmbedCtx:
     gather_block: int = 0       # Pallas embed_gather lane tile (autotuned;
                                 # 0 = the fixed full-row block)
     scatter_block: int = 0      # Pallas embed_scatter_add lane tile
+    stale: bool = False         # bounded-staleness push mode: the exchange
+                                # still runs every step (replica
+                                # consistency), but the train step applies
+                                # the *previous* step's exchanged gradient
+                                # through the staleness buffer
+                                # (core/transform.py); marker only here —
+                                # surfaced as the {name}_stale_mode metric
 
     @property
     def model_shards(self) -> int:
@@ -431,6 +438,11 @@ def lookup(table: jax.Array, ids: jax.Array, *, ctx: EmbedCtx,
     metrics = {f"{name}_rows": jnp.asarray(nrows, jnp.int32),
                f"{name}_dropped": jax.lax.stop_gradient(dropped),
                f"{name}_unique": jax.lax.stop_gradient(uniq)}
+    if ctx.stale:
+        # the jitter fallback is live for this table: its push is applied
+        # one step late (bounded by RunConfig.max_staleness, asserted via
+        # the staleness_violation metric in core/transform.py)
+        metrics[f"{name}_stale_mode"] = jnp.ones((), jnp.float32)
     if ctx.defer_push:
         # smuggle the dedupe buffer out to the post-backward deferred push
         # (core/buckets.py pops this before the fused metrics psum). Same

@@ -147,6 +147,9 @@ class ParamPlan:
     sparse: bool
     bytes: int
     capacity: int = 0                  # sparse tables: dedupe-buffer rows
+    stale: bool = False                # bounded-staleness push mode: this
+                                       # table applies s-step-old exchanged
+                                       # gradients (jitter fallback)
     est_cost: dict = field(default_factory=dict)
 
 
@@ -182,6 +185,9 @@ class Plan:
                                        # the method choice on restore)
     grown_tables: tuple = ()           # tables whose capacity the overflow
                                        # rule grew in this plan's census
+    stale_tables: tuple = ()           # tables running the bounded-staleness
+                                       # push (jitter fallback; empty = all
+                                       # synchronous)
 
     # ---- totals for Table-1 style census ----
     def census(self) -> dict:
@@ -213,6 +219,7 @@ class Plan:
             if t in self.table_wire else None,
             "grown": t in self.grown_tables,
             "alpha": self.table_alpha.get(t),
+            "stale": t in self.stale_tables,
         } for t, m in self.table_methods.items()}
 
 
@@ -261,14 +268,21 @@ def plan_diff(old: Plan, new: Plan, capacity_drift: float = 1.5) -> dict:
         for t in new.grown_tables)
     mesh_shape = lambda p: dict(p.mesh.shape) if p.mesh is not None else None
     mesh_changed = mesh_shape(old) != mesh_shape(new)
+    # sync <-> stale transitions (the jitter fallback): the train step's
+    # update rule for the flipped table changes, so the jit must re-trace
+    stale_flips = [
+        (t, t in old.stale_tables, t in new.stale_tables)
+        for t in sorted(set(old.stale_tables) ^ set(new.stale_tables))]
     return {
         "changed": bool(flips) or bool(wire_flips) or pspecs_changed
-                   or capacity_drifted or capacity_grown or mesh_changed,
+                   or capacity_drifted or capacity_grown or mesh_changed
+                   or bool(stale_flips),
         "mesh_changed": mesh_changed,
         "mesh": (mesh_shape(old), mesh_shape(new)),
         "rebuilt": False,             # set by the caller that acts on the diff
         "flips": flips,
         "wire_flips": wire_flips,
+        "stale_flips": stale_flips,
         "pspecs_changed": pspecs_changed,
         "capacity_drifted": capacity_drifted,
         "capacity_grown": capacity_grown,

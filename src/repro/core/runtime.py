@@ -193,6 +193,8 @@ class Runtime:
             defer_push=defer,
             gather_block=int(tiles[0]),
             scatter_block=int(tiles[1]),
+            stale=bool(self.plan is not None
+                       and name in getattr(self.plan, "stale_tables", ())),
         )
 
     def embed_capacity_for(self, name: str = "embed") -> int:

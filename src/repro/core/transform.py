@@ -38,7 +38,7 @@ from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core import buckets, cost_model, sparsity
 from repro.core.plan import (MeshRules, ParamPlan, Plan, add_fsdp,
                              default_rules, per_device_bytes, plan_diff,
-                             _pspec_shards)
+                             plan_leaves, _pspec_shards)
 from repro.core.runtime import Runtime
 from repro.models.layers import ParamSpec
 from repro.models.model import Model, build_model
@@ -70,19 +70,25 @@ def estimate_census(model: Model, rt: Runtime) -> sparsity.Census:
 
 def analyze(model: Model, rt: Runtime,
             memory_budget: float = 0.9 * HW.hbm_bytes,
-            census: Optional[sparsity.Census] = None) -> Plan:
+            census: Optional[sparsity.Census] = None,
+            stale_tables: tuple = ()) -> Plan:
     """Census + cost model -> Plan (the paper's analysis phase).
 
     Pass ``census`` (e.g. an observed one from a SparsityProfile) to replan
     from measured sparsity; by default the workload-model estimate is used.
+    ``stale_tables`` names sparse tables running the bounded-staleness push
+    (the jitter fallback) — stamped onto the plan so the train step builds
+    the stale update rule for exactly those tables.
     """
     if census is None:
         census = estimate_census(model, rt)
-    return choose_methods(model, rt, census, memory_budget)
+    return choose_methods(model, rt, census, memory_budget,
+                          stale_tables=stale_tables)
 
 
 def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
-                   memory_budget: float = 0.9 * HW.hbm_bytes) -> Plan:
+                   memory_budget: float = 0.9 * HW.hbm_bytes,
+                   stale_tables: tuple = ()) -> Plan:
     """Stage 2: pure census -> Plan (Table-3 argmin + memory escalation)."""
     specs = model.specs()
     dims = _mesh_dims(rt.mesh, rt.rules)
@@ -95,6 +101,13 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
     table_capacity: dict[str, int] = {}
     table_wire: dict[str, Any] = {}
     table_alpha: dict[str, float] = {}
+    # bounded-staleness eligibility: only tables with their own sparse
+    # exchange can defer their apply (dense-routed tables ride the
+    # synchronous buckets by construction), and only when the machinery is
+    # on at all (max_staleness > 0 allocates the state buffer)
+    stale_requested = set(stale_tables) \
+        if getattr(rt.run_cfg, "max_staleness", 0) > 0 else set()
+    stale_stamped: set[str] = set()
 
     def _wire_for(name: str):
         """OPSW wire dtype for one parameter: the census's profiled hint
@@ -135,6 +148,10 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
             if method in ("mpi_gatherv", "allreduce"):
                 # table replicated (paper's MPI baseline / dense-AR pick)
                 pspec = P(*([None] * len(spec.shape)))
+        stale = bool(spec.sparse and name in stale_requested
+                     and method in ("ps", "ps_gather", "mpi_gatherv"))
+        if stale:
+            stale_stamped.add(name)
         if method == "fsdp" and rt.mesh is not None:
             pspec = add_fsdp(pspec, spec.shape, rt.mesh, strategy)
         opt_pspec = pspec
@@ -143,7 +160,7 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
         return ParamPlan(name=name, method=method, pspec=pspec,
                          opt_pspec=opt_pspec, wire_dtype=wire,
                          sparse=spec.sparse, bytes=int(b), capacity=capacity,
-                         est_cost=costs)
+                         stale=stale, est_cost=costs)
 
     plans = jax.tree_util.tree_map_with_path(
         lambda path, s: plan_leaf(tree_path_name(path), s),
@@ -159,7 +176,8 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
                 table_methods=table_methods, table_capacity=table_capacity,
                 table_wire=table_wire, table_alpha=table_alpha,
                 grown_tables=tuple(sorted(
-                    n for n, t in census.tables.items() if t.grown)))
+                    n for n, t in census.tables.items() if t.grown)),
+                stale_tables=tuple(sorted(stale_stamped)))
 
     # ---- memory escalation: replicate -> ZeRO-1 -> ZeRO-3 (auto-PS) ----
     if rt.mesh is not None:
@@ -250,12 +268,24 @@ def state_shardings(plan: Plan, state_like: TrainState):
             return {"bucket": [rep] * len(live["bucket"]), "leaf": leaf}
         return per_leaf
 
+    def stale_sh(stale_like):
+        # staleness buffers: each table's "g" mirrors the table's param
+        # sharding (it is a gradient-shaped buffer), "age" is a replicated
+        # scalar — post-exchange grads are replica-identical, so the buffer
+        # never needs its own collective
+        if stale_like is None:
+            return None
+        by_name = {p.name: p.pspec for p in plan_leaves(plan.params)}
+        return {n: {"g": _ns(plan.mesh, by_name[n]), "age": rep}
+                for n in stale_like}
+
     return TrainState(
         step=rep,
         params=ps,
         m=moment(state_like.m, os),
         v=moment(state_like.v, os),
         ema=moment(state_like.ema, ps),
+        stale=stale_sh(getattr(state_like, "stale", None)),
     )
 
 
@@ -268,6 +298,102 @@ def batch_shardings(plan: Plan, batch_specs: dict):
         spec = [ba] + [None] * (len(v.shape) - 1) if len(v.shape) else []
         out[k] = _ns(plan.mesh, P(*spec))
     return out
+
+
+# ---------------------------------------------------------------------------
+# bounded-staleness buffers (the jitter fallback's train-state leg)
+# ---------------------------------------------------------------------------
+
+def stale_buffer_tables(plan: Plan, rt: Runtime) -> tuple:
+    """Tables that carry a staleness buffer in the train state: every
+    sparse table with its own sparse exchange, whenever the machinery is on
+    (``max_staleness > 0``). Deliberately independent of which tables are
+    currently *flipped* stale — the buffer pytree stays structurally
+    constant across sync<->stale flips, so checkpoints, sharding templates,
+    and donation never churn with the jitter state."""
+    if getattr(rt.run_cfg, "max_staleness", 0) <= 0:
+        return ()
+    return tuple(sorted(
+        p.name for p in plan_leaves(plan.params)
+        if p.sparse and p.method in ("ps", "ps_gather", "mpi_gatherv")))
+
+
+def ensure_stale_buffers(state: TrainState, plan: Plan,
+                         rt: Runtime) -> TrainState:
+    """Attach (or drop) the staleness buffer pytree for a plan: zero f32
+    grad buffers + int32 ages for every eligible table. Existing buffers
+    whose shapes still match carry across (a replan/remesh mid-stale-window
+    must not silently discard a buffered gradient); shape changes and
+    de-listed tables re-zero."""
+    names = stale_buffer_tables(plan, rt)
+    old = getattr(state, "stale", None)
+    if not names:
+        return state._replace(stale=None) if old is not None else state
+    by_idx = {p.name: i for i, p in enumerate(plan_leaves(plan.params))}
+    pleaves = jax.tree_util.tree_leaves(state.params)
+    old = old or {}
+    new = {}
+    for n in names:
+        shape = tuple(pleaves[by_idx[n]].shape)
+        o = old.get(n)
+        if o is not None and tuple(np.shape(o["g"])) == shape:
+            new[n] = o
+        else:
+            new[n] = {"g": jnp.zeros(shape, jnp.float32),
+                      "age": jnp.zeros((), jnp.int32)}
+    return state._replace(stale=new)
+
+
+def _make_staleness_rule(plan: Plan, rt: Runtime) -> Callable:
+    """The per-table gradient rewrite between exchange and optimizer:
+
+      stale table:  apply the *buffered* (previous step's) exchanged
+                    gradient, buffer the fresh one — the exchange itself
+                    still runs every step, so every replica buffers the
+                    same aggregate and the state stays replica-consistent;
+      sync table:   apply fresh + buffered, zero the buffer — ordinary
+                    steps add an exact zero, and the first step after a
+                    stale->sync flip automatically drains the last buffered
+                    gradient (no separate drain step to schedule).
+
+    Emits ``staleness_age`` (max applied age over stale tables) and
+    ``staleness_violation`` (sum of relu(age - max_staleness)) — the
+    in-graph bound the acceptance contract asserts on."""
+    stale_set = frozenset(getattr(plan, "stale_tables", ()))
+    smax = int(getattr(rt.run_cfg, "max_staleness", 0))
+    sparse_idx = {p.name: i for i, p in enumerate(plan_leaves(plan.params))
+                  if p.sparse}
+
+    def apply_rule(stale, grads, metrics):
+        if stale is None:
+            return None, grads, metrics
+        gleaves, gtree = jax.tree_util.tree_flatten(grads)
+        new_stale, ages = {}, []
+        for name, buf in stale.items():
+            i = sparse_idx[name]
+            g = gleaves[i]
+            if name in stale_set:
+                age = buf["age"] + 1
+                ages.append(age)
+                gleaves[i] = buf["g"].astype(g.dtype)
+                new_stale[name] = {"g": g.astype(jnp.float32),
+                                   "age": jnp.zeros((), jnp.int32)}
+            else:
+                gleaves[i] = (g.astype(jnp.float32)
+                              + buf["g"]).astype(g.dtype)
+                new_stale[name] = {"g": jnp.zeros_like(buf["g"]),
+                                   "age": jnp.zeros((), jnp.int32)}
+        if ages:
+            age_max = ages[0]
+            for a in ages[1:]:
+                age_max = jnp.maximum(age_max, a)
+            metrics["staleness_age"] = age_max
+            metrics["staleness_violation"] = sum(
+                jnp.maximum(a - smax, 0) for a in ages)
+        return (new_stale,
+                jax.tree_util.tree_unflatten(gtree, gleaves), metrics)
+
+    return apply_rule
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +412,8 @@ def make_train_step(model: Model, optimizer: Optimizer, rt: Runtime,
     hands back the post-psum flat buffers and ``optimizer.update_fused``
     applies straight from them against the fused state layout.
     """
+    stale_rule = _make_staleness_rule(plan, rt)
+    heartbeat = bool(getattr(rt.run_cfg, "heartbeat", False))
     if plan.bucket_plan is not None:
         if getattr(plan, "fused_apply", False) \
                 and optimizer.update_fused is None:
@@ -297,9 +425,12 @@ def make_train_step(model: Model, optimizer: Optimizer, rt: Runtime,
             def train_step_fused(state: TrainState, batch: dict):
                 (loss, metrics), grads, bufs = value_and_grad(
                     state.params, batch)
+                metrics = dict(metrics)
+                new_stale, grads, metrics = stale_rule(
+                    getattr(state, "stale", None), grads, metrics)
                 new_state, opt_metrics = optimizer.update_fused(
                     state, grads, bufs, bp)
-                metrics = dict(metrics)
+                new_state = new_state._replace(stale=new_stale)
                 metrics.update(opt_metrics)
                 metrics["loss"] = loss
                 return new_state, metrics
@@ -320,12 +451,26 @@ def make_train_step(model: Model, optimizer: Optimizer, rt: Runtime,
                     if g.dtype == jnp.float32 else g, grads, plan.params)
             return out, grads
 
+    unbucketed_hb = heartbeat and plan.bucket_plan is None
+
     def train_step(state: TrainState, batch: dict):
+        hb = None
+        if unbucketed_hb:
+            # no manual region to one-hot-encode in: the global-semantics
+            # heartbeat vector is already per-slot, echo it as metrics
+            batch = dict(batch)
+            hb = batch.pop("_heartbeat", None)
         (loss, metrics), grads = value_and_grad(state.params, batch)
-        new_state, opt_metrics = optimizer.update(state, grads)
         metrics = dict(metrics)
+        new_stale, grads, metrics = stale_rule(
+            getattr(state, "stale", None), grads, metrics)
+        new_state, opt_metrics = optimizer.update(state, grads)
+        new_state = new_state._replace(stale=new_stale)
         metrics.update(opt_metrics)
         metrics["loss"] = loss
+        if hb is not None:
+            for j in range(hb.shape[0]):
+                metrics[f"heartbeat{j}"] = hb[j]
         return new_state, metrics
 
     return train_step
@@ -368,6 +513,9 @@ def build_step(model: Model, optimizer: Optimizer, rt: Runtime, plan: Plan,
     step_fn = make_train_step(model, optimizer, rt, plan)
     if state is None:
         state = optimizer.init(model.init(jax.random.key(seed)))
+    # staleness buffers live on the canonical per-param state: attach/carry/
+    # drop them for THIS plan before any fused re-layout
+    state = ensure_stale_buffers(state, plan, rt)
     if getattr(plan, "fused_apply", False):
         state = fuse_state(state, plan.bucket_plan)
     state_like = state
@@ -380,6 +528,9 @@ def build_step(model: Model, optimizer: Optimizer, rt: Runtime, plan: Plan,
             shardings = state_shardings(plan, state_like)
             state = jax.device_put(state, shardings)
             bs = batch_shardings(plan, model.input_specs())
+            if getattr(rt.run_cfg, "heartbeat", False) and bs is not None:
+                ba = plan.rules.rules.get("batch")
+                bs["_heartbeat"] = _ns(plan.mesh, P(ba))
             step = jax.jit(step_fn, in_shardings=(shardings, bs),
                            out_shardings=(shardings, None), donate_argnums=0)
     else:
@@ -445,7 +596,9 @@ class Runner:
         jitted step changes, through a host round-trip when pspecs moved
         (the version-portable elastic path). Returns the plan diff.
         """
-        new_plan = analyze(self.model, self.rt, census=census)
+        new_plan = analyze(self.model, self.rt, census=census,
+                           stale_tables=getattr(self.plan, "stale_tables",
+                                                ()))
         diff = plan_diff(self.plan, new_plan, capacity_drift)
         if not (diff["changed"] or force):
             return diff

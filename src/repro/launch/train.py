@@ -91,6 +91,29 @@ def _parse():
                          "may escalate again (anti-thrash)")
     ap.add_argument("--min-data-parallel", type=int, default=1,
                     help="never shrink the data axis below this many slices")
+    ap.add_argument("--heartbeat", action="store_true",
+                    help="per-host straggler attribution: each data slice's "
+                         "step-time scalar rides the fused metrics psum so "
+                         "the auto-remesh evicts the *named* slow slice "
+                         "instead of the last by convention")
+    ap.add_argument("--no-attribution", action="store_true",
+                    help="keep the by-convention last-slice eviction even "
+                         "when heartbeats are on")
+    ap.add_argument("--probation-steps", type=int, default=100,
+                    help="probation window (steps) after readmit(): the "
+                         "re-admitted slice re-straggling inside it is "
+                         "re-evicted without a second full escalation")
+    ap.add_argument("--probation-sustained", type=int, default=2,
+                    help="outlier heartbeats on probation that re-evict")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="bound (steps) on the age of gradients the "
+                         "bounded-staleness sparse fallback may apply; "
+                         "0 disables the staleness machinery entirely")
+    ap.add_argument("--stale-on-jitter", action="store_true",
+                    help="under sustained step-time jitter below the "
+                         "eviction threshold, flip sparse tables to stale "
+                         "pushes (and back once the jitter drains); needs "
+                         "--max-staleness > 0")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -146,7 +169,8 @@ def main():
         kernel_autotune=args.kernel_autotune,
         bucket_bytes=args.bucket_bytes, embed_impl=args.embed_impl,
         learning_rate=args.lr, remat=args.remat,
-        attention_impl=args.attention, seed=args.seed)
+        attention_impl=args.attention, seed=args.seed,
+        heartbeat=args.heartbeat, max_staleness=args.max_staleness)
     mesh = None
     if args.mesh:
         dims = tuple(int(x) for x in args.mesh.split("x"))
@@ -166,7 +190,11 @@ def main():
                          profile_decay=args.profile_decay,
                          remesh_on_straggle=args.remesh_on_straggle,
                          remesh_cooldown=args.remesh_cooldown,
-                         min_data_parallel=args.min_data_parallel)
+                         min_data_parallel=args.min_data_parallel,
+                         attribution=not args.no_attribution,
+                         probation_steps=args.probation_steps,
+                         probation_sustained=args.probation_sustained,
+                         stale_on_jitter=args.stale_on_jitter)
     trainer = Trainer(cfg, shape, run_cfg, tcfg, ds, mesh=mesh)
     trainer.maybe_restore()
 
@@ -185,6 +213,12 @@ def main():
                     f"{t}:{v:.1f}" for t, v in sorted(over.items()))
             if m.get("remeshes"):
                 extra += f"  remeshes {int(m['remeshes'])}"
+            if m.get("regrows"):
+                extra += f"  regrows {int(m['regrows'])}"
+            if "stale_mode" in m:
+                extra += f"  stale {'on' if m['stale_mode'] else 'off'}"
+            if m.get("ckpt_retries"):
+                extra += f"  ckpt-retries {int(m['ckpt_retries'])}"
             if "apply_seconds" in m:
                 extra += f"  apply {m['apply_seconds'] * 1e6:.0f}us"
             if m.get("n_overlapped_sparse"):

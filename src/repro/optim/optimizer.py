@@ -47,6 +47,14 @@ class TrainState(NamedTuple):
     m: Any          # first moment / momentum (None for sgd)
     v: Any          # second moment (None for sgd/momentum)
     ema: Any        # EMA shadow params (None if disabled)
+    # bounded-staleness buffers for sparse tables (None unless
+    # RunConfig.max_staleness > 0): {table: {"g": f32 grad buffer,
+    # "age": int32 scalar}}. The buffer exists for every eligible table
+    # whenever the machinery is on — sync<->stale flips change only the
+    # update rule in the train step, never the state pytree. Optimizer
+    # update fns construct TrainState positionally and never touch this
+    # field; the staleness wrapper in core/transform.py re-attaches it.
+    stale: Any = None
 
 
 @dataclass(frozen=True)

@@ -12,7 +12,26 @@ Recovery awareness: restore/rebuild pauses (``note_recovery``) drop the
 in-flight timing sample and the outlier run so recovery latency never reads
 as a straggler, and a landed remesh (``note_remesh``) clears the whole
 timing window — the new world size is a different step-time regime, and
-comparing it against old-mesh medians would instantly re-trigger.
+comparing it against old-mesh medians would instantly re-trigger. A landed
+re-growth (``note_regrow``) resets the window and the cooldown origin the
+same way — a grow immediately followed by jitter must not double-escalate
+off stale pre-grow medians — and additionally arms a *probation* window
+for the re-admitted slice: if that slice's heartbeat re-straggles within
+the window, ``remesh_suggested`` fires after ``probation_sustained``
+outlier heartbeats, bypassing the full escalation run and the cooldown.
+
+Attribution: when per-host heartbeat scalars ride the fused metrics psum
+(``RunConfig.heartbeat``), the trainer decodes them host-side and feeds
+``note_heartbeats``; the monitor keeps a per-slice EMA and per-slice
+outlier runs, and ``straggler_slice()`` names the slow data slice so the
+eviction drops *that* host instead of the last slice by convention.
+
+Jitter fallback: the same outlier flags, kept as a windowed ratio with
+enter/exit hysteresis, drive the bounded-staleness sparse fallback — a run
+that is jittery (``jitter_enter`` fraction of steps are outliers) but not
+*sustained* enough to evict suggests flipping sparse tables to stale
+pushes (``stale_suggested``); dropping back under ``jitter_exit`` suggests
+flipping back (``stale_recovered``).
 
 The monitor also carries the adaptive-replanning telemetry: the trainer
 reports the observed sparsity α (from the SparsityProfile EMA) and every
@@ -36,14 +55,30 @@ class StepMonitor:
     min_samples: int = 10             # window fill before outlier detection
     cooldown: int = 0                 # steps after a remesh before the
                                       # monitor may suggest another (0 = none)
+    jitter_enter: float = 0.3         # outlier fraction that suggests the
+                                      # stale fallback (below eviction)
+    jitter_exit: float = 0.1          # outlier fraction that suggests
+                                      # flipping back to synchronous
+    heartbeat_decay: float = 0.5      # per-slice heartbeat EMA decay
     times: collections.deque = field(default_factory=collections.deque)
     _last: Optional[float] = None     # start() timestamp; None = no sample
     _outlier_run: int = 0
+    _outlier_flags: collections.deque = field(
+        default_factory=collections.deque)   # windowed outlier bits (jitter)
     total_steps: int = 0
     total_tokens: int = 0
     observed_alpha: Optional[float] = None   # latest measured sparse α
     replans: int = 0                         # plan hot-swaps so far
     remeshes: int = 0                        # elastic mesh shrinks so far
+    regrows: int = 0                         # elastic mesh re-growths so far
+    stale_flips: int = 0                     # sync<->stale plan flips so far
+    ckpt_retries: int = 0                    # background ckpt write retries
+    heartbeats: dict = field(default_factory=dict)  # slice -> step-time EMA
+    _slot_runs: dict = field(default_factory=dict)  # slice -> outlier run
+    _probation: Optional[tuple] = None       # (slice, until_step, sustained)
+    _probation_trip: Optional[int] = None    # slice that re-straggled on
+                                             # probation (fast re-evict)
+    _stale_on: bool = False                  # live plan has stale tables
     _last_remesh_step: Optional[int] = None  # total_steps at the last remesh
     ckpt_error: Optional[str] = None         # background checkpoint failure
     exchange: Optional[dict] = None          # bucketed-exchange accounting
@@ -72,6 +107,93 @@ class StepMonitor:
         self._last_remesh_step = self.total_steps
         self.times.clear()
         self._outlier_run = 0
+        self._outlier_flags.clear()
+        self.heartbeats.clear()
+        self._slot_runs.clear()
+        self._probation = None
+        self._probation_trip = None
+
+    def note_regrow(self, slot: Optional[int] = None,
+                    probation_steps: int = 0, probation_sustained: int = 2):
+        """An elastic re-growth landed (an evicted host was re-admitted):
+        count it and reset the escalation window + cooldown origin exactly
+        like ``note_remesh`` — the grown world is a new step-time regime,
+        and without the reset a grow immediately followed by jitter would
+        double-escalate off pre-grow medians. Additionally arm a probation
+        window on the re-admitted slice ``slot``: for ``probation_steps``
+        steps, ``probation_sustained`` consecutive outlier heartbeats from
+        that slice escalate straight to ``remesh_suggested`` — no second
+        full ``sustained`` run, no cooldown wait."""
+        self.regrows += 1
+        self._last_remesh_step = self.total_steps
+        self.times.clear()
+        self._outlier_run = 0
+        self._outlier_flags.clear()
+        self.heartbeats.clear()
+        self._slot_runs.clear()
+        self._probation_trip = None
+        self._probation = None
+        if slot is not None and probation_steps > 0:
+            self._probation = (int(slot), self.total_steps + probation_steps,
+                               max(int(probation_sustained), 1))
+
+    def note_heartbeats(self, beats: dict):
+        """Fold decoded per-slice heartbeat scalars ({data-slice index ->
+        step seconds}) into the attribution state: per-slice EMAs plus
+        per-slice outlier runs (a slice is an outlier when its EMA exceeds
+        ``straggler_factor`` x the median of the *other* slices). While a
+        probation window is armed, the probationer re-straggling for
+        ``probation_sustained`` beats trips the fast re-evict."""
+        d = self.heartbeat_decay
+        for slot, v in beats.items():
+            slot = int(slot)
+            old = self.heartbeats.get(slot)
+            self.heartbeats[slot] = float(v) if old is None else \
+                d * old + (1.0 - d) * float(v)
+        if len(self.heartbeats) < 2:
+            return
+        for slot, ema in self.heartbeats.items():
+            others = [v for s, v in self.heartbeats.items() if s != slot]
+            others.sort()
+            n = len(others)
+            med = others[n // 2] if n % 2 else \
+                0.5 * (others[n // 2 - 1] + others[n // 2])
+            if med > 0 and ema > self.straggler_factor * med:
+                self._slot_runs[slot] = self._slot_runs.get(slot, 0) + 1
+            else:
+                self._slot_runs[slot] = 0
+        if self._probation is not None:
+            slot, until, sustained = self._probation
+            if self.total_steps > until:
+                self._probation = None
+            elif self._slot_runs.get(slot, 0) >= sustained:
+                self._probation_trip = slot
+
+    def straggler_slice(self) -> Optional[int]:
+        """Name the slow data slice, when the heartbeats attribute one: the
+        probation tripper if armed, else the slice whose outlier run meets
+        ``sustained``. None = no attribution (the trainer falls back to its
+        by-convention drop)."""
+        if self._probation_trip is not None:
+            return self._probation_trip
+        best = None
+        for slot, run in self._slot_runs.items():
+            if run >= self.sustained and (best is None or run > best[1]):
+                best = (slot, run)
+        return best[0] if best else None
+
+    def note_stale_flip(self, on: bool):
+        """A sync<->stale plan flip landed (the jitter fallback): record the
+        live mode and clear the jitter window so the hysteresis refills
+        under the new plan before the opposite flip can fire."""
+        self._stale_on = bool(on)
+        self.stale_flips += 1
+        self._outlier_flags.clear()
+
+    def note_ckpt_retries(self, total: int):
+        """Surface the async checkpointer's cumulative transient-write
+        retry count (checkpoint/ckpt.py backoff loop) in the stats."""
+        self.ckpt_retries = int(total)
 
     def note_recovery(self):
         """A restore/rebuild pause happened (checkpoint restore, failed-step
@@ -123,6 +245,10 @@ class StepMonitor:
         is_outlier = dt is not None and len(self.times) >= self.min_samples \
             and dt > self.straggler_factor * med
         self._outlier_run = self._outlier_run + 1 if is_outlier else 0
+        if dt is not None and len(self.times) >= self.min_samples:
+            self._outlier_flags.append(is_outlier)
+            if len(self._outlier_flags) > self.window:
+                self._outlier_flags.popleft()
         dt = dt or 0.0
         stats = {
             "step_time_s": dt,
@@ -132,7 +258,22 @@ class StepMonitor:
             "remesh_suggested": self.remesh_suggested,
             "replans": self.replans,
             "remeshes": self.remeshes,
+            "regrows": self.regrows,
         }
+        if self.heartbeats:
+            stats["heartbeats"] = dict(self.heartbeats)
+            slot = self.straggler_slice()
+            if slot is not None:
+                stats["straggler_slice"] = slot
+        if self._probation is not None:
+            stats["probation_slice"] = self._probation[0]
+        if self._outlier_flags:
+            stats["jitter_ratio"] = self.jitter_ratio
+        if self._stale_on or self.stale_flips:
+            stats["stale_mode"] = self._stale_on
+            stats["stale_flips"] = self.stale_flips
+        if self.ckpt_retries:
+            stats["ckpt_retries"] = self.ckpt_retries
         if self.observed_alpha is not None:
             stats["observed_alpha"] = self.observed_alpha
         if self.ckpt_error is not None:
@@ -175,11 +316,47 @@ class StepMonitor:
         return self._outlier_run >= self.sustained
 
     @property
+    def jitter_ratio(self) -> float:
+        """Fraction of recent (window-filled) steps that were outliers —
+        the signal for the bounded-staleness fallback: high ratio without a
+        *sustained* run means intermittent contention, not a dead host."""
+        if not self._outlier_flags:
+            return 0.0
+        return sum(self._outlier_flags) / len(self._outlier_flags)
+
+    @property
+    def stale_suggested(self) -> bool:
+        """Sustained jitter below the eviction threshold: flip sparse
+        tables to bounded-stale pushes instead of evicting anyone."""
+        if self._stale_on or self.straggler_suspected:
+            return False
+        if len(self._outlier_flags) < self.min_samples:
+            return False
+        return self.jitter_ratio >= self.jitter_enter
+
+    @property
+    def stale_recovered(self) -> bool:
+        """The jitter drained while the stale fallback was live: flip the
+        tables back to synchronous (hysteresis: exit below jitter_exit)."""
+        if not self._stale_on:
+            return False
+        if len(self._outlier_flags) < self.min_samples:
+            return False
+        return self.jitter_ratio <= self.jitter_exit
+
+    @property
     def remesh_suggested(self) -> bool:
         """Escalation: a sustained outlier run outside the remesh cooldown.
         The trainer pairs this signal with a concrete shrink proposal
-        (launch/mesh.shrink_mesh) before acting."""
-        if not self.straggler_suspected:
+        (launch/mesh.shrink_mesh) before acting. A probation trip — the
+        re-admitted slice re-straggled inside its probation window —
+        escalates immediately, bypassing both the full sustained run and
+        the cooldown (the first escalation already vetted this host)."""
+        if self._probation_trip is not None:
+            return True
+        attributed = any(r >= self.sustained
+                         for r in self._slot_runs.values())
+        if not (self.straggler_suspected or attributed):
             return False
         if self.cooldown and self._last_remesh_step is not None and \
                 self.total_steps - self._last_remesh_step < self.cooldown:

@@ -18,7 +18,20 @@ Responsibilities beyond the jitted step:
     α·messages term changes with N), and resume on the live state with
     trajectory continuity. ``remesh_cooldown`` steps must pass before the
     monitor may escalate again, and ``min_data_parallel`` floors the
-    shrink;
+    shrink. With ``RunConfig.heartbeat`` the eviction is *attributed*: each
+    data slice's step-time scalar rides the fused metrics psum, the monitor
+    EMAs them per slot, and the shrink drops the named slice (by process
+    index on a real multi-host mesh) instead of the last by convention;
+  * mesh re-growth — ``Trainer.readmit()`` re-inserts the evicted slice at
+    its original grid position (``launch/mesh.grow_mesh``) through the same
+    checkpoint → ``analyze()`` → rebuild path, arming a probation window:
+    if the re-admitted slice re-straggles, it is re-evicted immediately,
+    bypassing the full escalation and the cooldown;
+  * bounded-staleness sparse fallback — with ``stale_on_jitter`` and
+    ``RunConfig.max_staleness > 0``, sustained jitter *below* the eviction
+    threshold flips the sparse tables to stale pushes (the step applies the
+    previous step's exchanged gradient; dense buckets stay synchronous) and
+    flips back, with an automatic drain, once the jitter drains;
   * adaptive replanning — with ``replan_every > 0`` the driver feeds the
     in-graph sparsity census (``embed_unique`` metrics) into a
     ``SparsityProfile`` EMA and periodically re-runs the planner on the
@@ -51,9 +64,10 @@ from repro.core.runtime import Runtime
 from repro.core.sparsity import (SparsityProfile, observed_census,
                                  wire_dtype_hints)
 from repro.core.transform import (analyze, apply_replan, build_step,
-                                  estimate_census, state_shardings)
+                                  estimate_census, stale_buffer_tables,
+                                  state_shardings)
 from repro.data.pipeline import Dataset
-from repro.launch.mesh import shrink_mesh
+from repro.launch.mesh import grow_mesh, shrink_mesh
 from repro.models.model import build_model
 from repro.optim.optimizer import (fuse_state, is_fused, make_optimizer,
                                    unfuse_state)
@@ -90,6 +104,16 @@ class TrainerConfig:
     remesh_on_straggle: bool = False  # act on the monitor's escalation
     remesh_cooldown: int = 50      # steps before the monitor may re-escalate
     min_data_parallel: int = 1     # never shrink the data axis below this
+    # ---- straggler attribution + probationary re-admission ----
+    attribution: bool = True       # evict the heartbeat-attributed slice
+                                   # (falls back to last-slice convention)
+    probation_steps: int = 100     # probation window after readmit()
+    probation_sustained: int = 2   # outlier heartbeats on probation that
+                                   # re-evict without a full escalation
+    # ---- bounded-staleness sparse fallback (jitter below eviction) ----
+    stale_on_jitter: bool = False  # flip sparse tables to stale pushes on
+                                   # sustained jitter (needs
+                                   # RunConfig.max_staleness > 0)
 
 
 class Trainer:
@@ -104,6 +128,13 @@ class Trainer:
             if tcfg.ckpt_dir else None
         self.step = 0
         self.profile = SparsityProfile(decay=tcfg.profile_decay)
+        # per-slot heartbeat override hook: (step, n_slots) -> float[n] step
+        # seconds. Single-controller default writes the measured step time
+        # into every slot; multi-host shims (and the chaos bench) use this
+        # to carry genuinely per-host timings.
+        self.heartbeat_fn: Optional[Callable] = None
+        self._evicted: list = []       # LIFO of evicted slices (readmit)
+        self._stale_tables: tuple = ()  # live bounded-staleness table set
         log.debug("jax %s compat=%s", jax.__version__, compat.capabilities())
         self._build(mesh)
 
@@ -126,7 +157,8 @@ class Trainer:
         census = None
         if carry_plan is not None and self.profile.ready():
             census = self._observed_census(carry_plan)
-        self.plan = analyze(self.model, self.rt, census=census)
+        self.plan = analyze(self.model, self.rt, census=census,
+                            stale_tables=self._stale_tables)
         self.rt.plan = self.plan
         self.optimizer = make_optimizer(self.rt)
         self.train_step, self.state, self.shardings = build_step(
@@ -255,7 +287,14 @@ class Trainer:
             census.capacity = max(
                 census.capacity,
                 max(t.capacity for t in census.tables.values()))
-        new_plan = analyze(self.model, self.rt, census=census)
+        # the checkpoint's stale flags are the authority on which tables run
+        # the bounded-staleness push — a run saved mid-stale-window resumes
+        # stale (and vice versa), instead of silently flipping on restore
+        self._stale_tables = tuple(sorted(
+            n for n, e in saved.items() if e.get("stale")))
+        self.monitor._stale_on = bool(self._stale_tables)  # no flip counted
+        new_plan = analyze(self.model, self.rt, census=census,
+                           stale_tables=self._stale_tables)
         diff = plan_diff(self.plan, new_plan)
         log.info("restore adopted the checkpoint's plan record: "
                  "capacities %s -> %s, flips=%s", diff["table_capacity"][0],
@@ -310,23 +349,46 @@ class Trainer:
 
     def _auto_remesh(self) -> Optional[dict]:
         """Act on the monitor's straggler escalation: commit a checkpoint,
-        evict the suspected-slow data slice, and resume on the live state.
+        evict the slow data slice, and resume on the live state.
 
-        Single-controller repro cannot attribute *which* host is slow (step
-        times aggregate over the collective), so the last data slice is
-        dropped by convention — a multi-host deployment would map the
-        straggling process index to its slice. The rebuild re-runs
-        ``analyze()`` against the smaller world, so methods, capacities,
-        and buckets are re-priced at the new N (a ps↔allreduce flip across
-        the remesh is legitimate and handled). Returns the plan diff across
-        the remesh, or None when the mesh cannot shrink.
+        With heartbeat attribution (``RunConfig.heartbeat`` +
+        ``TrainerConfig.attribution``) the monitor *names* the slow slice —
+        per-host step scalars ride the fused metrics psum and the per-slot
+        EMAs single out the outlier — so the eviction drops that slice; on
+        a genuinely multi-process mesh the attributed slice resolves to its
+        owning process and the shrink goes through
+        ``shrink_mesh(drop_process_index=...)``. Without attribution the
+        last data slice is dropped by convention. The evicted slice
+        (devices + grid position) is recorded so ``readmit()`` can grow the
+        mesh back at the same position. The rebuild re-runs ``analyze()``
+        against the smaller world, so methods, capacities, and buckets are
+        re-priced at the new N (a ps↔allreduce flip across the remesh is
+        legitimate and handled). Returns the plan diff across the remesh,
+        or None when the mesh cannot shrink.
         """
-        new_mesh = shrink_mesh(
-            self.mesh,
-            drop_axis_index=dict(self.mesh.shape)["data"] - 1
-            if self.mesh is not None and "data" in self.mesh.axis_names
-            else 0,
-            axis="data", min_axis_size=self.tcfg.min_data_parallel)
+        if self.mesh is None or "data" not in self.mesh.axis_names:
+            self.monitor.note_recovery()
+            return None
+        devs = np.asarray(self.mesh.devices)
+        ax = self.mesh.axis_names.index("data")
+        slot = self.monitor.straggler_slice() if self.tcfg.attribution \
+            else None
+        if slot is not None and tuple(self.rt.batch_axes) == ("data",) \
+                and 0 <= int(slot) < devs.shape[ax]:
+            drop = int(slot)      # heartbeat slots ARE data grid indices
+        else:
+            slot = None
+            drop = devs.shape[ax] - 1      # by-convention fallback
+        kw = {"drop_axis_index": drop}
+        if slot is not None and \
+                len({getattr(d, "process_index", 0) for d in devs.flat}) > 1:
+            procs = {getattr(d, "process_index", 0)
+                     for d in np.take(devs, drop, axis=ax).flat}
+            if len(procs) == 1:
+                kw = {"drop_process_index": procs.pop()}
+        new_mesh = shrink_mesh(self.mesh, axis="data",
+                               min_axis_size=self.tcfg.min_data_parallel,
+                               **kw)
         if new_mesh is None:
             log.warning(
                 "straggler escalation at step %d but the mesh cannot "
@@ -334,7 +396,10 @@ class Trainer:
                 "re-arming the monitor", self.step,
                 self.tcfg.min_data_parallel)
             self.monitor.note_recovery()   # re-arm instead of re-firing
+            self.monitor._probation_trip = None
             return None
+        evicted = {"devices": np.take(devs, drop, axis=ax),
+                   "index": drop, "slot": slot, "step": self.step}
         if self.ckpt is not None:
             # synchronous commit before touching placement: a crash during
             # the reshard recovers from this step, not an older one. A
@@ -350,13 +415,94 @@ class Trainer:
                 self.monitor.note_ckpt_error(e)
         old_plan, old_shape = self.plan, dict(self.mesh.shape)
         self.remesh(new_mesh)
+        self._evicted.append(evicted)
         diff = plan_diff(old_plan, self.plan)
         self.monitor.note_remesh()
         log.warning(
-            "auto-remesh at step %d: mesh %s -> %s, flips=%s, "
-            "capacities %s -> %s", self.step, old_shape,
-            dict(new_mesh.shape), diff["flips"], diff["table_capacity"][0],
+            "auto-remesh at step %d: mesh %s -> %s (%s data slice %d), "
+            "flips=%s, capacities %s -> %s", self.step, old_shape,
+            dict(new_mesh.shape),
+            "heartbeat-attributed" if slot is not None else "by-convention",
+            drop, diff["flips"], diff["table_capacity"][0],
             diff["table_capacity"][1])
+        return diff
+
+    def readmit(self) -> Optional[dict]:
+        """Re-admit the most recently evicted slice on probation.
+
+        The grow mirrors the shrink through the same safety protocol:
+        commit a checkpoint, re-insert the evicted devices at their
+        original grid position (``launch/mesh.grow_mesh``), and rebuild
+        plan + step through the observed-census elastic path — grown
+        capacities and profiled choices survive, only the world-size terms
+        re-price. The monitor's escalation window and cooldown origin reset
+        (``note_regrow``) and a probation window arms on the re-admitted
+        slice: if its heartbeats re-straggle for ``probation_sustained``
+        beats within ``probation_steps``, the next eviction fires
+        immediately — no second full escalation, no cooldown wait. Returns
+        the plan diff, or None when there is nothing to re-admit (or the
+        devices are no longer addressable)."""
+        if not self._evicted or self.mesh is None:
+            return None
+        ev = self._evicted[-1]
+        try:
+            new_mesh = grow_mesh(self.mesh, ev["devices"],
+                                 insert_axis_index=ev["index"], axis="data")
+        except ValueError as e:
+            log.warning("readmit at step %d impossible: %s", self.step, e)
+            return None
+        self._evicted.pop()
+        if self.ckpt is not None:
+            try:
+                self.ckpt.save_sync(self.step, self._canonical_state(),
+                                    extra=self._ckpt_extra())
+            except Exception as e:
+                log.exception("pre-readmit checkpoint failed; continuing "
+                              "with the live-state re-grow")
+                self.monitor.note_ckpt_error(e)
+        old_plan, old_shape = self.plan, dict(self.mesh.shape)
+        self.remesh(new_mesh)
+        diff = plan_diff(old_plan, self.plan)
+        self.monitor.note_regrow(
+            slot=ev["index"], probation_steps=self.tcfg.probation_steps,
+            probation_sustained=self.tcfg.probation_sustained)
+        log.warning(
+            "readmit at step %d: mesh %s -> %s (slice %d back on probation "
+            "for %d steps), flips=%s", self.step, old_shape,
+            dict(new_mesh.shape), ev["index"], self.tcfg.probation_steps,
+            diff["flips"])
+        return diff
+
+    def _flip_stale(self, on: bool) -> Optional[dict]:
+        """Flip the stale-eligible sparse tables to (or back from) the
+        bounded-staleness push and hot-swap the jitted step. The staleness
+        buffers themselves are plan-independent state (transform.py
+        ``ensure_stale_buffers``): only ``Plan.stale_tables`` and the
+        compiled step change, and the first synchronous step after a
+        flip-back drains the last buffered gradient as part of its own
+        update. Returns the plan diff, or None when nothing flips."""
+        target = stale_buffer_tables(self.plan, self.rt) if on else ()
+        if tuple(target) == tuple(getattr(self.plan, "stale_tables", ())):
+            return None
+        census = self._observed_census(self.plan) if self.profile.ready() \
+            else None
+        new_plan = analyze(self.model, self.rt, census=census,
+                           stale_tables=tuple(target))
+        diff = plan_diff(self.plan, new_plan)
+        if not diff["changed"]:
+            return None
+        self._stale_tables = tuple(new_plan.stale_tables)
+        self.plan = new_plan
+        self.train_step, self.state, self.shardings = apply_replan(
+            self.model, self.optimizer, self.rt, new_plan, self.state, diff)
+        self.monitor.note_stale_flip(bool(new_plan.stale_tables))
+        self._note_plan_costs()
+        log.warning(
+            "stale flip at step %d (jitter %.2f): tables %s now %s "
+            "(max_staleness=%d)", self.step, self.monitor.jitter_ratio,
+            list(new_plan.stale_tables) or diff["stale_flips"],
+            "bounded-stale" if new_plan.stale_tables else "synchronous",
+            getattr(self.run_cfg, "max_staleness", 0))
         return diff
 
     # ------------------------------------------------------------------
@@ -375,7 +521,8 @@ class Trainer:
         if not self.profile.ready(self.tcfg.replan_warmup):
             return None
         census = self._observed_census(self.plan)
-        new_plan = analyze(self.model, self.rt, census=census)
+        new_plan = analyze(self.model, self.rt, census=census,
+                           stale_tables=self._stale_tables)
         diff = plan_diff(self.plan, new_plan, self.tcfg.replan_drift)
         self.monitor.note_alpha(census.alpha)
         if not diff["changed"]:
@@ -401,17 +548,46 @@ class Trainer:
         return diff
 
     # ------------------------------------------------------------------
+    def _heartbeat_batch(self, batch: dict) -> dict:
+        """Inject the per-slot heartbeat vector the step carries through
+        the fused metrics psum (one f32 scalar per data slice). Single
+        controller: every slot gets this process's last measured step time,
+        so attribution reads flat unless ``heartbeat_fn`` (a multi-host
+        shim, or the chaos bench) supplies genuinely per-slot timings."""
+        if not getattr(self.run_cfg, "heartbeat", False) \
+                or self.mesh is None:
+            return batch
+        n = max(self.rt.replicas, 1)
+        if self.heartbeat_fn is not None:
+            hb = np.asarray(self.heartbeat_fn(self.step, n),
+                            np.float32).reshape(n)
+        else:
+            t = self.monitor.times[-1] if self.monitor.times else 0.0
+            hb = np.full((n,), float(t), np.float32)
+        batch = dict(batch)
+        batch["_heartbeat"] = hb
+        return batch
+
     def run(self, on_metrics: Optional[Callable[[int, dict], None]] = None):
         tokens_per_step = self.shape_cfg.tokens
         retries = 0
         while self.step < self.tcfg.total_steps:
-            batch = self.dataset.batch(self.step)
+            batch = self._heartbeat_batch(self.dataset.batch(self.step))
             self.monitor.start()
             try:
                 self.state, metrics = self.train_step(self.state, batch)
                 if (self.step + 1) % self.tcfg.metrics_host_every == 0:
                     metrics = {k: float(v) for k, v in metrics.items()
                                if getattr(v, "ndim", 0) == 0}
+                    # decode the heartbeat slots out of the fused metrics
+                    # psum into the attribution state (and out of the
+                    # user-visible metrics — stats carries the EMAs)
+                    beats = {int(k[9:]): metrics.pop(k)
+                             for k in list(metrics)
+                             if k.startswith("heartbeat")
+                             and k[9:].isdigit()}
+                    if beats:
+                        self.monitor.note_heartbeats(beats)
                     self.profile.update(metrics)
                     # overflow is visible host-side every profiled step, not
                     # just when (or if) the growth replan fires; restricted
@@ -461,6 +637,7 @@ class Trainer:
                 # re-noting until consumed; once the writer is clean again
                 # and no new failure is noted, the signal self-heals
                 self.monitor.note_ckpt_error(self.ckpt.error)
+                self.monitor.note_ckpt_retries(self.ckpt.total_retries)
             if self.ckpt is not None and self.step % self.tcfg.ckpt_every == 0:
                 # a failed *previous* background write re-raises out of
                 # save()'s internal wait(); periodic checkpointing is not
@@ -481,6 +658,19 @@ class Trainer:
                 log.warning("sustained step-time regression at step %d — "
                             "straggler suspected; consider remesh() or "
                             "remesh_on_straggle=True", self.step)
+            elif self.tcfg.stale_on_jitter and \
+                    getattr(self.run_cfg, "max_staleness", 0) > 0:
+                # the jitter fallback sits strictly below eviction: only
+                # consulted when no straggler escalation is in flight
+                if self.monitor.stale_suggested:
+                    flipped = self._flip_stale(True)
+                elif self.monitor.stale_recovered:
+                    flipped = self._flip_stale(False)
+                else:
+                    flipped = None
+                if flipped is not None:
+                    stats["stale_flips"] = self.monitor.stale_flips
+                    stats["stale_mode"] = self.monitor._stale_on
             if on_metrics is not None:
                 on_metrics(self.step, {**metrics, **stats})
             elif self.step % self.tcfg.log_every == 0:

@@ -141,6 +141,161 @@ def test_ckpt_error_surfaces_in_stats(clock):
     assert "ckpt_error" not in _tick(mon, clock, 1.0)
 
 
+def test_ckpt_retries_surface_in_stats(clock):
+    mon = StepMonitor()
+    assert "ckpt_retries" not in _tick(mon, clock, 1.0)
+    mon.note_ckpt_retries(3)
+    assert _tick(mon, clock, 1.0)["ckpt_retries"] == 3
+
+
+# ---------------------------------------------------------------------------
+# heartbeat attribution + probation (the re-admission protocol)
+# ---------------------------------------------------------------------------
+
+def test_heartbeats_attribute_the_slow_slice(clock):
+    """Per-slice heartbeat EMAs name the straggler: a slice whose EMA runs
+    past straggler_factor x the median of the others for ``sustained``
+    beats is attributed — and the attribution alone escalates, even when
+    the local wall clock (which the collective hides) looks healthy."""
+    mon = StepMonitor(sustained=3, min_samples=4)
+    for i in range(3):
+        _tick(mon, clock, 1.0)
+        mon.note_heartbeats({0: 0.01, 1: 0.01, 2: 0.01, 3: 0.01})
+        assert mon.straggler_slice() is None
+    stats = None
+    for i in range(3):
+        stats = _tick(mon, clock, 1.0)         # wall clock: nothing to see
+        mon.note_heartbeats({0: 0.01, 1: 0.01, 2: 0.2, 3: 0.01})
+    assert not mon.straggler_suspected         # no wall-clock outliers...
+    assert mon.straggler_slice() == 2          # ...but slice 2 is named
+    assert mon.remesh_suggested                # attribution escalates
+    assert mon.heartbeats[2] > mon.heartbeats[0]
+    stats = _tick(mon, clock, 1.0)
+    assert stats["straggler_slice"] == 2
+
+
+def test_heartbeat_recovery_clears_the_slot_run(clock):
+    mon = StepMonitor(sustained=3)
+    for _ in range(2):
+        mon.note_heartbeats({0: 0.01, 1: 0.2})
+    assert mon._slot_runs[1] == 2
+    # the contention drains; the EMA needs a few clean beats to decay back
+    # under straggler_factor x the median of the others
+    for _ in range(5):
+        mon.note_heartbeats({0: 0.01, 1: 0.01})
+    assert mon._slot_runs[1] == 0
+    assert mon.straggler_slice() is None
+
+
+def test_note_regrow_resets_window_and_cooldown_origin(clock):
+    """A landed re-growth is a new step-time regime: the timing window,
+    outlier runs, and the cooldown origin all reset — without this, a grow
+    immediately followed by jitter re-escalates off pre-grow medians."""
+    mon = StepMonitor(sustained=3, min_samples=4, cooldown=14)
+    for _ in range(4):
+        _tick(mon, clock, 1.0)
+    for _ in range(3):
+        _tick(mon, clock, 5.0)
+    assert mon.remesh_suggested
+    mon.note_regrow()                          # at total_steps = 7
+    assert mon.regrows == 1
+    assert not mon.times and mon._outlier_run == 0
+    assert not mon._outlier_flags and not mon.heartbeats
+    assert not mon.remesh_suggested
+    # a fresh sustained run inside the re-armed cooldown: suspected, held
+    for _ in range(4):
+        _tick(mon, clock, 1.0)
+    for _ in range(3):
+        _tick(mon, clock, 5.0)                 # steps 12..14: 7 < 14
+    assert mon.straggler_suspected and not mon.remesh_suggested
+
+
+def test_probation_fast_reevict_bypasses_escalation_and_cooldown(clock):
+    """The re-admitted slice re-straggling inside its probation window
+    escalates after probation_sustained beats — no full sustained run, no
+    cooldown wait (the first escalation already vetted this host)."""
+    mon = StepMonitor(sustained=5, min_samples=4, cooldown=100)
+    mon.note_remesh()                          # cooldown armed at step 0
+    mon.note_regrow(slot=1, probation_steps=20, probation_sustained=2)
+    _tick(mon, clock, 1.0)
+    mon.note_heartbeats({0: 0.01, 1: 0.2, 2: 0.01})
+    assert not mon.remesh_suggested            # 1 beat < probation_sustained
+    _tick(mon, clock, 1.0)
+    mon.note_heartbeats({0: 0.01, 1: 0.2, 2: 0.01})
+    assert mon._probation_trip == 1
+    assert mon.remesh_suggested                # inside cooldown, run of 2 < 5
+    assert mon.straggler_slice() == 1          # the eviction names it
+    mon.note_remesh()                          # the re-evict lands
+    assert mon._probation is None and mon._probation_trip is None
+
+
+def test_probation_expires_after_its_window(clock):
+    mon = StepMonitor(sustained=5, min_samples=4)
+    mon.note_regrow(slot=1, probation_steps=3, probation_sustained=2)
+    for _ in range(4):
+        _tick(mon, clock, 1.0)                 # the window elapses clean
+        mon.note_heartbeats({0: 0.01, 1: 0.01, 2: 0.01})
+    assert mon._probation is None              # back to ordinary standards
+    _tick(mon, clock, 1.0)
+    mon.note_heartbeats({0: 0.01, 1: 0.2, 2: 0.01})
+    _tick(mon, clock, 1.0)
+    mon.note_heartbeats({0: 0.01, 1: 0.2, 2: 0.01})
+    assert mon._probation_trip is None         # 2 beats no longer trip
+    assert not mon.remesh_suggested
+
+
+# ---------------------------------------------------------------------------
+# jitter hysteresis (the bounded-staleness fallback's driver)
+# ---------------------------------------------------------------------------
+
+def test_jitter_hysteresis_suggests_stale_then_recovery(clock):
+    """Intermittent outliers (ratio >= jitter_enter without a sustained
+    run) suggest the stale flip; after the flip the window refills, and the
+    ratio draining under jitter_exit suggests flipping back."""
+    mon = StepMonitor(sustained=5, min_samples=4, window=10,
+                      jitter_enter=0.3, jitter_exit=0.1)
+    for _ in range(6):
+        _tick(mon, clock, 1.0)
+    assert not mon.stale_suggested and mon.jitter_ratio == 0.0
+    for _ in range(3):                         # alternating: spiky, never
+        _tick(mon, clock, 5.0)                 # sustained
+        _tick(mon, clock, 1.0)
+    assert mon.jitter_ratio >= 0.3
+    assert not mon.straggler_suspected
+    assert mon.stale_suggested
+    assert not mon.stale_recovered             # not stale yet: nothing to
+    mon.note_stale_flip(True)                  # recover from
+    assert mon.stale_flips == 1
+    assert not mon._outlier_flags              # window refills under the
+    assert not mon.stale_suggested             # new plan (and _stale_on
+    #                                            blocks re-suggesting)
+    for _ in range(3):
+        _tick(mon, clock, 1.0)
+    assert not mon.stale_recovered             # min_samples not met yet
+    for _ in range(3):
+        _tick(mon, clock, 1.0)
+    assert mon.jitter_ratio == 0.0
+    assert mon.stale_recovered
+    mon.note_stale_flip(False)
+    assert mon.stale_flips == 2 and not mon._stale_on
+    stats = _tick(mon, clock, 1.0)
+    assert stats["stale_mode"] is False and stats["stale_flips"] == 2
+
+
+def test_straggler_escalation_preempts_the_stale_fallback(clock):
+    """A sustained run is an eviction case, not a staleness case: while
+    straggler_suspected holds, stale_suggested must stay quiet even with
+    the jitter ratio far past the enter threshold."""
+    mon = StepMonitor(sustained=3, min_samples=4, window=10)
+    for _ in range(4):
+        _tick(mon, clock, 1.0)
+    for _ in range(3):
+        _tick(mon, clock, 5.0)
+    assert mon.jitter_ratio >= 0.3
+    assert mon.straggler_suspected
+    assert not mon.stale_suggested
+
+
 # ---------------------------------------------------------------------------
 # shrink_mesh eligibility (structural checks run distributed, below)
 # ---------------------------------------------------------------------------
@@ -153,6 +308,20 @@ def test_shrink_mesh_eligibility_single_device():
     assert shrink_mesh(mesh, 0, axis="pod") is None   # axis absent
     with pytest.raises(ValueError):
         shrink_mesh(mesh, 5)                          # no such slice
+
+
+def test_grow_mesh_eligibility_single_device():
+    from repro.launch.mesh import grow_mesh, make_mesh
+    assert grow_mesh(None, []) is None
+    mesh = make_mesh((1, 1), ("data", "model"))
+    dev = np.asarray(mesh.devices).flat[0]
+    assert grow_mesh(mesh, [dev], axis="pod") is None  # axis absent
+    with pytest.raises(ValueError):
+        grow_mesh(mesh, [dev])                   # still on the live mesh
+    with pytest.raises(ValueError):
+        grow_mesh(mesh, [dev, dev])              # wrong slice shape
+    with pytest.raises(ValueError):
+        grow_mesh(mesh, [dev], insert_axis_index=5)  # out of range
 
 
 # ---------------------------------------------------------------------------
@@ -210,6 +379,47 @@ def test_save_sync_discards_stale_async_error(tmp_path):
     assert ck.last_committed == 3
     assert latest_step(str(tmp_path)) == 3
     ck.wait()                                 # consumed: must not re-raise
+
+
+def test_async_save_retries_transient_failures(tmp_path, monkeypatch):
+    """A transient background-write failure (filesystem hiccup) retries
+    with backoff instead of silently waiting for the next period; the
+    cumulative count surfaces as total_retries (-> stats ckpt_retries)."""
+    from repro.checkpoint import ckpt as ckpt_mod
+    from repro.checkpoint.ckpt import AsyncCheckpointer
+    real = ckpt_mod.save_checkpoint
+    calls = {"n": 0}
+
+    def flaky(*a, **k):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise OSError("transient")
+        return real(*a, **k)
+
+    monkeypatch.setattr(ckpt_mod, "save_checkpoint", flaky)
+    ck = AsyncCheckpointer(str(tmp_path), keep=2, retries=3, backoff=0.001)
+    ck.save(5, _tiny_state())
+    ck.wait()                                  # must not raise: 3rd try won
+    assert calls["n"] == 3
+    assert ck.total_retries == 2
+    assert ck.last_committed == 5
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_async_save_surfaces_exhausted_retries(tmp_path, monkeypatch):
+    from repro.checkpoint import ckpt as ckpt_mod
+    from repro.checkpoint.ckpt import AsyncCheckpointer
+
+    def always_fail(*a, **k):
+        raise OSError("disk gone")
+
+    monkeypatch.setattr(ckpt_mod, "save_checkpoint", always_fail)
+    ck = AsyncCheckpointer(str(tmp_path), keep=2, retries=2, backoff=0.001)
+    ck.save(5, _tiny_state())
+    with pytest.raises(OSError):
+        ck.wait()                              # exhausted: failure surfaces
+    assert ck.total_retries == 2
+    assert ck.last_committed is None
 
 
 def test_background_ckpt_failure_does_not_abort_run(tiny_shape, tmp_path):
@@ -447,6 +657,128 @@ print("RESULT:" + json.dumps({
     assert res["axes"] == ["data", "model"]
     assert res["same_grid"] and res["disjoint"]
     assert res["floored"] is True             # 3 - 1 < min_axis_size=3
+
+
+@pytest.mark.distributed
+def test_shrink_grow_round_trip_restores_the_grid():
+    """grow_mesh is shrink_mesh's exact inverse: re-inserting the evicted
+    slice at its original grid position restores the device grid
+    bit-for-bit (every surviving device kept its position through both
+    hops), carries the axis names and axis types, enforces the
+    min_axis_size floor on a later shrink, and rejects devices already on
+    the live mesh."""
+    code = """
+from repro.launch.mesh import grow_mesh, shrink_mesh
+
+mesh = make_mesh((4, 2), ("data", "model"))
+grid = np.asarray(mesh.devices)
+m3 = shrink_mesh(mesh, drop_axis_index=1)
+evicted = grid[1]
+m4 = grow_mesh(m3, evicted, insert_axis_index=1)
+back = np.asarray(m4.devices)
+round_trip = all(back[i, j].id == grid[i, j].id
+                 for i in range(4) for j in range(2))
+types_kept = getattr(m4, "axis_types", None) == \
+    getattr(mesh, "axis_types", None)
+appended = grow_mesh(m3, evicted)       # default: after the last slice
+app = np.asarray(appended.devices)
+overlap_raises = False
+try:
+    grow_mesh(m4, evicted, insert_axis_index=1)
+except ValueError:
+    overlap_raises = True
+floor = shrink_mesh(m4, 0, min_axis_size=4)
+print("RESULT:" + json.dumps({
+    "shrunk_shape": dict(m3.shape), "grown_shape": dict(m4.shape),
+    "axes": list(m4.axis_names), "round_trip": bool(round_trip),
+    "types_kept": bool(types_kept),
+    "appended_last": [d.id for d in app[3]] == [d.id for d in evicted],
+    "overlap_raises": overlap_raises, "floored": floor is None}))
+"""
+    res = distributed_run(code, devices=8)
+    assert res["shrunk_shape"] == {"data": 3, "model": 2}
+    assert res["grown_shape"] == {"data": 4, "model": 2}
+    assert res["axes"] == ["data", "model"]
+    assert res["round_trip"], "a surviving device moved across the round trip"
+    assert res["types_kept"]
+    assert res["appended_last"]
+    assert res["overlap_raises"], "re-admitting live devices must raise"
+    assert res["floored"] is True             # 4 - 1 < min_axis_size=4
+
+
+@pytest.mark.distributed
+def test_manifest_plan_restore_across_a_grow():
+    """The evict -> readmit cycle commits checkpoints at both hops; the
+    last one carries the *re-grown* world's plan record and mesh shape, so
+    a fresh trainer on the full mesh restores the step, the plan, and the
+    trajectory without re-deriving anything from the build-time estimate."""
+    code = """
+import tempfile
+from repro.checkpoint.ckpt import latest_step
+from repro.configs import RunConfig, ShapeConfig, get_config, reduced
+from repro.data import SyntheticLM
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+cfg = reduced(get_config("phi3-medium-14b"), vocab=256)
+shape = ShapeConfig("t", seq_len=32, global_batch=8, kind="train")
+rc = RunConfig(attention_impl="naive", remat="none", param_dtype="float32",
+               compute_dtype="float32", wire_dtype="float32",
+               capacity_mode="capped", capacity_factor=2.0, link_latency=0.0)
+ck = tempfile.mkdtemp()
+
+def trainer(steps):
+    ds = SyntheticLM(cfg.vocab_size, 32, 8)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    tcfg = TrainerConfig(total_steps=steps, ckpt_dir=ck, ckpt_every=100,
+                         min_data_parallel=2, probation_steps=30)
+    return Trainer(cfg, shape, rc, tcfg, ds, mesh=mesh), mesh
+
+t, mesh = trainer(4)
+with use_mesh(mesh):
+    t.run()                                  # steps 1..4 on (4, 2)
+    assert t._auto_remesh() is not None      # by-convention evict (slice 3)
+    shrunk = dict(t.mesh.shape)
+    evicted = [int(d.id) for d in t._evicted[-1]["devices"].flat]
+    import dataclasses
+    t.tcfg = dataclasses.replace(t.tcfg, total_steps=8)
+    t.run()                                  # steps 5..8 on (3, 2)
+    assert t.readmit() is not None           # the slice returns, probation
+    grown = dict(t.mesh.shape)
+    probation = t.monitor._probation[0] if t.monitor._probation else None
+    t.tcfg = dataclasses.replace(t.tcfg, total_steps=10)
+    t.run()                                  # steps 9..10 + final save
+saved_ckpt = latest_step(ck)
+
+t2, mesh2 = trainer(12)
+cap_estimate = t2.plan.table_capacity["embed"]
+with use_mesh(mesh2):
+    t2.maybe_restore()
+    restored_step = t2.step
+    losses = []
+    t2.run(on_metrics=lambda s, m: losses.append(float(m["loss"])))
+
+print("RESULT:" + json.dumps({
+    "shrunk": shrunk, "grown": grown, "probation": probation,
+    "evicted_ids": evicted,
+    "remeshes": t.monitor.remeshes, "regrows": t.monitor.regrows,
+    "latest_ckpt": saved_ckpt, "restored_step": restored_step,
+    "cap_estimate": cap_estimate,
+    "cap_saved": t.plan.table_capacity["embed"],
+    "cap_restored": t2.plan.table_capacity["embed"],
+    "losses": losses}))
+"""
+    res = distributed_run(code, devices=8, timeout=600)
+    assert res["shrunk"] == {"data": 3, "model": 2}
+    assert res["grown"] == {"data": 4, "model": 2}
+    assert res["probation"] == 3              # the returned slice, on watch
+    assert len(res["evicted_ids"]) == 2       # one (model=2) slice
+    assert res["remeshes"] == 1 and res["regrows"] == 1
+    assert res["latest_ckpt"] == 10
+    assert res["restored_step"] == 10
+    # the re-grown world's plan record came back, not the fresh estimate
+    assert res["cap_restored"] == res["cap_saved"]
+    assert len(res["losses"]) == 2
+    assert all(np.isfinite(l) for l in res["losses"])
 
 
 @pytest.mark.distributed

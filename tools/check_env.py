@@ -36,6 +36,7 @@ def collect() -> dict:
         "process_count": jax.process_count(),
         "devices": [str(d) for d in jax.devices()[:8]],
         "remesh": _remesh_eligibility(),
+        "attribution": _attribution_eligibility(),
         "topology": _host_topology(),
         "xla_flags": os.environ.get("XLA_FLAGS", ""),
         "optional_deps": {
@@ -95,6 +96,35 @@ def _remesh_eligibility() -> dict:
         "hosts": jax.process_count(),
         "max_data_parallel": n,               # all-data mesh upper bound
         "can_shrink_data_axis": n >= 2,
+    }
+
+
+def _attribution_eligibility() -> dict:
+    """Can straggler *attribution* (RunConfig.heartbeat -> the monitor's
+    per-slice EMAs -> an attributed eviction) do real work here? Per-slice
+    heartbeats need >= 2 data slices to compare against each other, and the
+    attributed shrink only resolves to shrink_mesh(drop_process_index=...)
+    when each data slice is wholly owned by one process — on a
+    single-process host the eviction still drops the attributed *grid*
+    slice, and the bounded-staleness fallback (RunConfig.max_staleness +
+    --stale-on-jitter) is available regardless."""
+    import jax
+    from repro.launch.mesh import make_mesh, slice_for_process
+    n = jax.device_count()
+    hosts = jax.process_count()
+    per_process_slices = None
+    if hosts > 1 and n % hosts == 0:
+        # would every process map to one whole data slice on the natural
+        # (hosts, n // hosts) mesh? (the drop_process_index fast path)
+        mesh = make_mesh((hosts, n // hosts), ("data", "model"))
+        owned = [slice_for_process(mesh, p) for p in range(hosts)]
+        per_process_slices = all(s is not None for s in owned)
+    return {
+        "heartbeats_comparable": n >= 2,      # >= 2 slices to EMA against
+        "process_eviction": bool(per_process_slices),
+        "grid_eviction": n >= 2,              # single-controller fallback
+        "probation_readmit": n >= 2,          # grow needs a slice to return
+        "stale_fallback": True,               # plan-level, mesh-independent
     }
 
 
@@ -192,6 +222,13 @@ def main() -> int:
           f"{rm['can_shrink_data_axis']} "
           f"(devices={rm['devices']}, hosts={rm['hosts']}; "
           f"remesh_on_straggle drops one data slice per escalation)")
+    at = report["attribution"]
+    evict = "by process" if at["process_eviction"] else \
+        "by grid slice" if at["grid_eviction"] else "n/a (1 device)"
+    print(f"straggler attribution: heartbeats comparable="
+          f"{at['heartbeats_comparable']}  eviction resolves {evict}  "
+          f"probation/readmit={at['probation_readmit']}  "
+          f"stale fallback=always (plan-level)")
     print("PASS" if report["ok"] else
           "WARN: JAX older than the supported range — tier-1 results are "
           "not meaningful")
