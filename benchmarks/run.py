@@ -13,7 +13,7 @@ import sys
 def main() -> None:
     which = set(sys.argv[1:]) or {"table1", "table3", "table4", "fig13",
                                   "roofline", "kernels", "adaptive",
-                                  "buckets", "elastic"}
+                                  "buckets", "elastic", "serve"}
     if "table1" in which:
         from benchmarks import table1_census
         table1_census.main()
@@ -41,6 +41,9 @@ def main() -> None:
     if "elastic" in which:
         from benchmarks import elastic_remesh
         elastic_remesh.main()
+    if "serve" in which:
+        from benchmarks import serve_bench
+        serve_bench.main()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,137 @@
+"""Serving engine benchmark: batched prefill vs the teacher-forced toy loop.
+
+Drives the rebuilt engine (``runtime.server.Server`` — one jitted prefill
+dispatch per admission, slot-paged decode with device-side sampling) and the
+pre-engine baseline (``ToyServer`` — token-at-a-time teacher-forced prefill
+through the shared decode step, host argmax) over the same mixed-length
+workload at three offered loads, and reports per load:
+
+  * decode throughput (generated tokens / wall-clock drain time);
+  * TTFT p50/p99 (submit -> first generated token materialized);
+  * per-token decode latency p50/p99 (gaps between materialized tokens);
+  * engine hygiene: prefill calls == requests (one dispatch per admission),
+    prefill traces == distinct length buckets, cross-slot mismatches == 0.
+
+Everything lands in ``BENCH_serve.json`` next to the repo root.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+
+import numpy as np
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+LOADS = (2, 6, 12)          # offered load: requests per burst
+MAX_NEW = 16
+PROMPT_LENS = (5, 11, 23, 37)   # spans buckets 8/16/32/64
+
+
+def _workload(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, 200, size=PROMPT_LENS[i % len(PROMPT_LENS)])
+            .astype(np.int32) for i in range(n)]
+
+
+def _percentiles(xs):
+    if not xs:
+        return {"p50": float("inf"), "p99": float("inf")}
+    return {"p50": float(np.percentile(xs, 50)),
+            "p99": float(np.percentile(xs, 99))}
+
+
+def _drive(server, prompts):
+    from repro.runtime.server import Request
+    reqs = [Request(i, p, max_new_tokens=MAX_NEW)
+            for i, p in enumerate(prompts)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        server.submit(r)
+    server.run_until_drained()
+    wall = time.perf_counter() - t0
+    undone = [r.uid for r in reqs if not r.done]
+    assert not undone, f"requests never completed: {undone}"
+    toks = sum(len(r.out_tokens) for r in reqs)
+    ttft = [r.ttft for r in reqs]
+    gaps = [b - a for r in reqs
+            for a, b in zip(r.token_times, r.token_times[1:])]
+    return {"requests": len(reqs), "tokens": toks, "wall_s": wall,
+            "tok_per_s": toks / wall, "ttft_s": _percentiles(ttft),
+            "per_token_s": _percentiles(gaps)}
+
+
+def main():
+    from repro.configs import RunConfig, get_config, reduced
+    from repro.runtime.server import Server, ServerConfig, ToyServer
+
+    cfg = reduced(get_config("phi3-medium-14b"), layers=2, vocab=512)
+    rc = RunConfig(attention_impl="naive")
+    scfg = ServerConfig(max_batch=4, max_seq=128)
+
+    engine = Server(cfg, rc, scfg, seed=0)
+    params = engine.params
+
+    # warm every length bucket + the decode step so per-load numbers are
+    # steady-state (first-trace compile otherwise dominates TTFT)
+    _drive(engine, _workload(len(PROMPT_LENS), seed=123))
+
+    by_load = {}
+    for n in LOADS:
+        calls0 = engine.stats["prefill_calls"]
+        r = _drive(engine, _workload(n))
+        r["prefill_calls"] = engine.stats["prefill_calls"] - calls0
+        by_load[n] = r
+        print(f"engine load={n:3d}: {r['tok_per_s']:8.1f} tok/s, "
+              f"TTFT p50 {r['ttft_s']['p50'] * 1e3:6.1f} ms / p99 "
+              f"{r['ttft_s']['p99'] * 1e3:6.1f} ms, per-token p50 "
+              f"{r['per_token_s']['p50'] * 1e3:5.1f} ms")
+    engine.close()
+
+    toy = ToyServer(cfg, rc, scfg, params=params, seed=0)
+    _drive(toy, _workload(2, seed=123))          # same courtesy warmup
+    toy_res = _drive(toy, _workload(max(LOADS)))
+    print(f"toy    load={max(LOADS):3d}: {toy_res['tok_per_s']:8.1f} tok/s, "
+          f"TTFT p50 {toy_res['ttft_s']['p50'] * 1e3:6.1f} ms "
+          f"(teacher-forced prefill, host argmax)")
+
+    top = by_load[max(LOADS)]
+    speedup = top["tok_per_s"] / toy_res["tok_per_s"]
+    measured_calls = sum(r["prefill_calls"] for r in by_load.values())
+    print(f"engine vs toy at load {max(LOADS)}: {speedup:.2f}x tok/s, "
+          f"{measured_calls} prefill calls for {sum(LOADS)} requests "
+          f"({engine.stats['prefill_traces']} traces over buckets "
+          f"{sorted(engine.stats['buckets'])})")
+
+    # CI smoke contract
+    for n, r in by_load.items():
+        assert r["prefill_calls"] == n, \
+            f"load {n}: {r['prefill_calls']} prefill dispatches (want one " \
+            "per admitted request)"
+    assert math.isfinite(top["ttft_s"]["p99"]), \
+        "p99 TTFT not finite at the highest offered load"
+    assert top["tok_per_s"] > toy_res["tok_per_s"], \
+        "rebuilt engine slower than the teacher-forced toy loop"
+    assert engine.stats["cross_slot_mismatches"] == 0, \
+        "slot-paged decode leaked tokens across slots"
+    assert engine.stats["prefill_traces"] == len(engine.stats["buckets"]), \
+        "prefill retraced inside a length bucket"
+
+    out = {"loads": list(LOADS), "max_new_tokens": MAX_NEW,
+           "prompt_lens": list(PROMPT_LENS),
+           "engine": {str(n): r for n, r in by_load.items()},
+           "toy": toy_res, "speedup_vs_toy": speedup,
+           "stats": {k: (sorted(v) if isinstance(v, set) else v)
+                     for k, v in engine.stats.items()},
+           "tables": engine.plan.tables()}
+    with open(OUT, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"OK: wrote {os.path.normpath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

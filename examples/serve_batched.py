@@ -1,4 +1,6 @@
-"""Batched serving example: continuous-batching-lite over the decode step.
+"""Batched serving example: the continuous-batching engine — one jitted
+prefill per admission (cached per prompt-length bucket), slot-paged decode
+with device-side sampling, detokenization off the critical path.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -28,6 +30,11 @@ dt = time.time() - t0
 toks = sum(len(r.out_tokens) for r in done)
 print(f"served {len(done)} requests / {toks} tokens in {dt:.1f}s "
       f"({toks/dt:.1f} tok/s, batch={server.scfg.max_batch})")
+print(f"  {server.stats['prefill_calls']} prefill dispatches over buckets "
+      f"{sorted(server.stats['buckets'])} "
+      f"({server.stats['prefill_traces']} traces), "
+      f"{server.stats['decode_steps']} decode steps")
 for r in done[:3]:
     print(f"  req {r.uid}: {len(r.prompt)}-token prompt -> "
-          f"{r.out_tokens[:8]}...")
+          f"{r.out_tokens[:8]}... (TTFT {r.ttft*1e3:.0f} ms)")
+server.close()

@@ -68,6 +68,11 @@ class EmbedCtx:
                                 # through the staleness buffer
                                 # (core/transform.py); marker only here —
                                 # surfaced as the {name}_stale_mode metric
+    census: bool = True         # cross-replica observed-census reduction:
+                                # off on the serve path (decode-kind
+                                # Runtime), where nothing consumes the
+                                # profile and the scalar psum would ride
+                                # every decode step's critical path
 
     @property
     def model_shards(self) -> int:
@@ -190,7 +195,12 @@ def _fwd_local(table_shard, ids_loc, ctx: EmbedCtx, capacity: int):
     in_shard_map = ctx.mesh is not None and not ctx.manual and \
         ctx.method not in ("dense", "allreduce")
     if in_shard_map and ctx.batch_axes:
-        uniq = jax.lax.psum(uniq, ctx.batch_axes) / ctx.replicas
+        if ctx.census:
+            uniq = jax.lax.psum(uniq, ctx.batch_axes) / ctx.replicas
+        else:
+            # census off (serve path): drop the measurement rather than
+            # declare a device-varying scalar replicated (out_specs P())
+            uniq = jnp.zeros_like(uniq)
     vs = table_shard.shape[0]
     if ctx.model_shards > 1:
         m = jax.lax.axis_index(ctx.model_axis)

@@ -188,6 +188,11 @@ class Plan:
     stale_tables: tuple = ()           # tables running the bounded-staleness
                                        # push (jitter fallback; empty = all
                                        # synchronous)
+    table_serve: dict = field(default_factory=dict)  # decode-shape plans
+                                       # only: name -> serve-mesh pricing
+                                       # (cost_model.serve_table_pricing —
+                                       # pull bytes/seconds per decode step
+                                       # and per-token exchange seconds)
 
     # ---- totals for Table-1 style census ----
     def census(self) -> dict:
@@ -220,6 +225,9 @@ class Plan:
             "grown": t in self.grown_tables,
             "alpha": self.table_alpha.get(t),
             "stale": t in self.stale_tables,
+            # decode-shape plans carry serve-mesh pricing (per-step pull
+            # bytes/seconds + per-token exchange seconds at the decode batch)
+            "serve": self.table_serve.get(t),
         } for t, m in self.table_methods.items()}
 
 

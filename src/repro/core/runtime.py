@@ -195,6 +195,7 @@ class Runtime:
             scatter_block=int(tiles[1]),
             stale=bool(self.plan is not None
                        and name in getattr(self.plan, "stale_tables", ())),
+            census=self.shape_cfg.kind != "decode",
         )
 
     def embed_capacity_for(self, name: str = "embed") -> int:

@@ -101,6 +101,8 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
     table_capacity: dict[str, int] = {}
     table_wire: dict[str, Any] = {}
     table_alpha: dict[str, float] = {}
+    table_serve: dict[str, dict] = {}
+    serving = rt.shape_cfg.kind == "decode"
     # bounded-staleness eligibility: only tables with their own sparse
     # exchange can defer their apply (dense-routed tables ride the
     # synchronous buckets by construction), and only when the machinery is
@@ -145,6 +147,15 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
             table_capacity[name] = capacity
             table_wire[name] = wire
             table_alpha[name] = float(alpha)
+            if serving:
+                # serve-mesh pricing at decode batch shapes: the per-step
+                # pull wire and per-token exchange seconds this table costs
+                # the engine under its chosen method (one token per
+                # sequence per decode step)
+                table_serve[name] = cost_model.serve_table_pricing(
+                    b=b, alpha=float(alpha), method=table_methods[name],
+                    dims=dims, batch_tokens=rt.shape_cfg.global_batch,
+                    hw=hw)
             if method in ("mpi_gatherv", "allreduce"):
                 # table replicated (paper's MPI baseline / dense-AR pick)
                 pspec = P(*([None] * len(spec.shape)))
@@ -175,6 +186,7 @@ def choose_methods(model: Model, rt: Runtime, census: sparsity.Census,
                 zero_stage=rt.run_cfg.zero_stage, embed_method=embed_method,
                 table_methods=table_methods, table_capacity=table_capacity,
                 table_wire=table_wire, table_alpha=table_alpha,
+                table_serve=table_serve,
                 grown_tables=tuple(sorted(
                     n for n, t in census.tables.items() if t.grown)),
                 stale_tables=tuple(sorted(stale_stamped)))
@@ -488,6 +500,108 @@ def make_prefill_step(model: Model, rt: Runtime, plan: Plan) -> Callable:
         logits, cache, _ = model.prefill_fn(params, batch)
         return logits, cache
     return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps (runtime/server.py) — batched prefill + slot-paged decode
+# ---------------------------------------------------------------------------
+
+def sample_tokens(logits, *, greedy: bool, temperature: float, key):
+    """Device-side sampling: (B, V) logits -> (B,) int32 token ids.
+
+    Greedy argmax or temperature-scaled categorical — inside the jitted
+    step, so the decode loop never round-trips logits through the host.
+    """
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = max(float(temperature), 1e-4)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / t, axis=-1).astype(jnp.int32)
+
+
+def make_serve_prefill_step(model: Model, rt: Runtime, plan: Plan, *,
+                            greedy: bool = True, temperature: float = 1.0
+                            ) -> Callable:
+    """Batched prefill for one admitted request: a single dispatch that
+
+      1. runs the full forward over the (bucket-padded) prompt, collecting
+         every layer's K/V (``model.prefill_cache_fn``),
+      2. inserts those rows into the live decode cache at the request's slot
+         (rows past the true length carry pad K/V — the per-slot length
+         masks them out of every later attention),
+      3. samples the first generated token from the last prompt position
+         (device-side — the request's TTFT token), and
+      4. sets the slot's length and pending-token state.
+
+    jit this once per power-of-two prompt-length bucket: the padded token
+    shape is the only shape that varies, so two prompts in the same bucket
+    share one executable.
+    """
+    if model.prefill_cache_fn is None:
+        raise ValueError(
+            f"family {model.cfg.family!r} has no positional KV cache; "
+            "batched prefill is undefined under padding (use the decode "
+            "loop for recurrent families)")
+
+    def prefill_step(params, cache, lens, tok, tokens, length, slot, key):
+        # tokens (1, Lb) pad-right; length, slot scalars; cache the live
+        # (n_layers, B, S, KV, hd) decode cache; lens (B,); tok (B, 1)
+        if rt.mesh is not None:
+            # batch-sharded lookups (ps shard_map) need the batch divisible
+            # by the data axis: run the forward at the full decode width —
+            # every row computes the same prompt, row 0 is consumed below
+            tokens = jnp.broadcast_to(
+                tokens, (lens.shape[0],) + tokens.shape[1:])
+        logits, kv = model.prefill_cache_fn(params, tokens)
+        logits = logits[:1]
+        kv = jax.tree.map(
+            lambda p: jax.lax.slice_in_dim(p, 0, 1, axis=1), kv)
+        last = jax.lax.dynamic_slice_in_dim(
+            logits, length - 1, 1, axis=1)[:, 0, :]          # (1, Vp)
+        nxt = sample_tokens(last, greedy=greedy,
+                            temperature=temperature, key=key)  # (1,)
+
+        def insert(c, p):
+            start = (jnp.zeros_like(slot), slot) + \
+                (jnp.zeros_like(slot),) * (c.ndim - 2)
+            return jax.lax.dynamic_update_slice(c, p.astype(c.dtype), start)
+
+        new_cache = jax.tree.map(insert, cache, kv)
+        new_lens = jax.lax.dynamic_update_slice(
+            lens, length[None].astype(lens.dtype), (slot,))
+        new_tok = jax.lax.dynamic_update_slice(
+            tok, nxt[:, None], (slot, jnp.zeros_like(slot)))
+        return new_cache, new_lens, new_tok, nxt
+
+    return prefill_step
+
+
+def make_serve_decode_step(model: Model, rt: Runtime, plan: Plan, *,
+                           max_seq: int, greedy: bool = True,
+                           temperature: float = 1.0) -> Callable:
+    """One slot-paged decode step over the whole batch.
+
+    Per-slot state lives on device: ``lens`` (B,) is each slot's position
+    (threaded into ``model.decode_fn`` — per-row KV write + per-slot
+    attention masking), ``tok`` (B,1) is each slot's pending token (fed
+    straight from the previous step's device-side sample — no host argmax
+    round-trip). ``active`` is the host's (B,) occupancy mask: inactive
+    slots neither advance their length nor replace their token, so a
+    completed-but-not-yet-reused slot idles in place until the next prefill
+    overwrites it. Returns sampled tokens with inactive slots as -1 (the
+    detokenizer's cross-slot sanity marker).
+    """
+    def decode_step(params, cache, lens, tok, active, key):
+        logits, new_cache = model.decode_fn(params, cache, tok, lens)
+        nxt = sample_tokens(logits[:, -1, :], greedy=greedy,
+                            temperature=temperature, key=key)   # (B,)
+        act = active & (lens > 0)
+        new_tok = jnp.where(act[:, None], nxt[:, None], tok)
+        new_lens = jnp.where(act, jnp.minimum(lens + 1, max_seq), lens)
+        out_tok = jnp.where(act, nxt, -1)
+        return new_cache, new_lens, new_tok, out_tok
+
+    return decode_step
 
 
 # ---------------------------------------------------------------------------

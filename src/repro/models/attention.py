@@ -132,6 +132,10 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, qmap=None) -> jax.Array:
     """One-step attention against a (possibly sequence-sharded) KV cache.
 
     q: (B,1,H,D); caches: (B,S,KV,D) sharded P(batch, kv_seq, None, None).
+    ``cache_len`` is a scalar (homogeneous batch — the dry-run decode cells)
+    or a per-slot (B,) vector (the serving engine's slot-paged decode: each
+    slot masks exactly its own valid prefix, so a freed-and-reused slot never
+    attends over a previous request's stale rows).
     Written in global semantics — GSPMD partitions the softmax reduction over
     the sharded cache axis (flash-decoding's psum combine).
     """
@@ -140,7 +144,10 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, qmap=None) -> jax.Array:
     scale = q.shape[-1] ** -0.5
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kq)
     kpos = jnp.arange(k_cache.shape[1])[None, None, None, :]
-    s = jnp.where(kpos < cache_len, s, NEG_INF)
+    cl = jnp.asarray(cache_len)
+    if cl.ndim == 1:
+        cl = cl[:, None, None, None]
+    s = jnp.where(kpos < cl, s, NEG_INF)
     probs = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, vq)
     return out.astype(q.dtype)

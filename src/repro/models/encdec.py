@@ -96,7 +96,11 @@ def decode_stack(params, tokens, enc_out, *, cfg, rt, cache=None,
                              capacity=rt.embed_capacity_for("embed"))
     x = x.astype(rt.dtype)
     x = rt.constrain(x, rt_residual_axes(rt, x))
-    positions = (cache_len if cache_len is not None else 0) + jnp.arange(s)
+    base = jnp.asarray(cache_len if cache_len is not None else 0)
+    # scalar cache_len: homogeneous batch; (B,) vector: per-slot positions
+    # (the serving engine's slot-paged decode — attn_block masks per slot)
+    positions = base[:, None] + jnp.arange(s)[None, :] if base.ndim == 1 \
+        else base + jnp.arange(s)
 
     def layer(x, inp):
         p, layer_cache = inp

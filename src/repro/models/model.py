@@ -33,6 +33,12 @@ class Model:
     decode_fn: Callable
     init_cache: Callable
     cache_pspecs: Callable
+    # (params, tokens (B,S)) -> (logits, kv_cache) where kv_cache has the
+    # decode-cache layout — the serving engine's batched prefill collects the
+    # per-layer K/V for slot insertion. None for families whose recurrent
+    # state cannot be prefix-prefilled exactly under padding (lstm/ssm) and
+    # for enc-dec models (their prefill needs encoder inputs).
+    prefill_cache_fn: Optional[Callable] = None
 
     def init(self, key) -> Any:
         return init_tree(key, self.specs(), self.rt.param_dtype)
@@ -108,6 +114,17 @@ def build_model(cfg: ModelConfig, rt: Runtime) -> Model:
         return transformer.forward(p, b["tokens"], cfg=cfg, rt=rt,
                                    embeds=b.get("embeds"))
 
+    def prefill_cache_fn(p, tokens):
+        logits, kv, _ = transformer.forward(p, tokens, cfg=cfg, rt=rt,
+                                            collect_kv=True)
+        return logits, kv
+
+    # exact bucketed prefill needs a purely positional cache: padded tail
+    # tokens are masked out of attention by the per-slot length, but they
+    # WOULD corrupt a recurrent carry (ssm) — so those families stay on the
+    # decode loop. hybrid carries an ssm state alongside its KV: same story.
+    paged = cfg.family in ("dense", "moe", "vlm")
+
     return Model(
         cfg=cfg, rt=rt,
         specs=lambda: transformer.model_specs(cfg, rt),
@@ -117,4 +134,5 @@ def build_model(cfg: ModelConfig, rt: Runtime) -> Model:
         init_cache=lambda b, s: transformer.init_cache(cfg, rt, b, s, rt.dtype),
         cache_pspecs=lambda: transformer.cache_pspec_tree(
             cfg, rt, None, None),
+        prefill_cache_fn=prefill_cache_fn if paged else None,
     )

@@ -92,8 +92,14 @@ def _zero_padded_qk(p_attn, cfg, rt):
 
 
 def attn_block(p, x, *, cfg, rt, positions, layer_cache=None, cache_len=None,
-               cross_kv=None, causal=True):
-    """Self (or cross) attention sub-block. Returns (out, new_cache)."""
+               cross_kv=None, causal=True, return_kv=False):
+    """Self (or cross) attention sub-block. Returns (out, new_cache).
+
+    ``return_kv``: on the cache-less path, hand back this layer's (K, V)
+    at the cache dtype — the serving engine's batched prefill collects them
+    across layers and inserts the rows into the live decode cache at the
+    request's slot (one dispatch per admission instead of prompt_len).
+    """
     b, s, d = x.shape
     hd = cfg.head_dim
     hp = rt.pad_heads(cfg.n_heads)
@@ -132,12 +138,25 @@ def attn_block(p, x, *, cfg, rt, positions, layer_cache=None, cache_len=None,
     if layer_cache is not None:
         k_cache, v_cache = layer_cache
         if cross_kv is None:
-            # decode: write the new K/V at cache_len (sequence-sharded dim;
-            # GSPMD lowers the dynamic update on the sharded axis)
-            k_cache = jax.lax.dynamic_update_slice_in_dim(
-                k_cache, k.astype(k_cache.dtype), cache_len, axis=1)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(
-                v_cache, v.astype(v_cache.dtype), cache_len, axis=1)
+            cl = jnp.asarray(cache_len)
+            if cl.ndim == 1:
+                # per-slot write: row b lands at its own length (the serving
+                # engine's slot-paged decode). A one-hot select rather than a
+                # scatter: it partitions cleanly on the sharded cache axis,
+                # and an out-of-range slot (len >= S) simply writes nowhere.
+                hit = jnp.arange(k_cache.shape[1])[None, :] == cl[:, None]
+                k_cache = jnp.where(hit[:, :, None, None],
+                                    k.astype(k_cache.dtype), k_cache)
+                v_cache = jnp.where(hit[:, :, None, None],
+                                    v.astype(v_cache.dtype), v_cache)
+            else:
+                # homogeneous batch: write the new K/V at cache_len
+                # (sequence-sharded dim; GSPMD lowers the dynamic update on
+                # the sharded axis)
+                k_cache = jax.lax.dynamic_update_slice_in_dim(
+                    k_cache, k.astype(k_cache.dtype), cache_len, axis=1)
+                v_cache = jax.lax.dynamic_update_slice_in_dim(
+                    v_cache, v.astype(v_cache.dtype), cache_len, axis=1)
         out = attn_mod.decode_attention(
             q, k_cache, v_cache,
             cache_len + (1 if cross_kv is None else 0), qmap=qmap)
@@ -147,7 +166,8 @@ def attn_block(p, x, *, cfg, rt, positions, layer_cache=None, cache_len=None,
             q, k, v, impl=rt.run_cfg.attention_impl,
             causal=(causal and cross_kv is None),
             chunk=rt.run_cfg.attention_chunk, qmap=qmap)
-        new_cache = None
+        new_cache = (k.astype(rt.dtype), v.astype(rt.dtype)) \
+            if (return_kv and cross_kv is None) else None
     if hp > cfg.n_heads:
         # zero padded heads BEFORE the o-proj: keeps the padded columns
         # gradient-isolated, so padding is exactly output- and
@@ -162,7 +182,7 @@ def attn_block(p, x, *, cfg, rt, positions, layer_cache=None, cache_len=None,
 
 
 def decoder_layer(p, x, *, cfg, rt, positions, layer_cache=None,
-                  cache_len=None, moe_exec="tp"):
+                  cache_len=None, moe_exec="tp", collect_kv=False):
     """Pre-norm decoder layer; returns (x, new_cache, metrics)."""
     metrics = {}
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
@@ -173,14 +193,15 @@ def decoder_layer(p, x, *, cfg, rt, positions, layer_cache=None,
             ssm_mod.init_ssm_state(cfg, x.shape[0])
         attn_out, new_kv = attn_block(
             p["attn"], h, cfg=cfg, rt=rt, positions=positions,
-            layer_cache=kv_cache, cache_len=cache_len)
+            layer_cache=kv_cache, cache_len=cache_len, return_kv=collect_kv)
         ssm_out, h_ssm = ssm_mod.ssm_mix(p["ssm"], h, h_ssm, cfg=cfg, rt=rt)
         attn_out = (attn_out + ssm_out) * 0.5
         new_cache = (*new_kv, h_ssm) if new_kv is not None else None
     else:
         attn_out, new_cache = attn_block(
             p["attn"], h, cfg=cfg, rt=rt, positions=positions,
-            layer_cache=layer_cache, cache_len=cache_len)
+            layer_cache=layer_cache, cache_len=cache_len,
+            return_kv=collect_kv)
     x = x + attn_out
     x = rt.constrain(x, rt_residual_axes(rt, x))
 
@@ -250,11 +271,17 @@ def cache_pspec_tree(cfg, rt, batch, cache_seq):
 
 
 def forward(params, tokens, *, cfg, rt, cache=None, cache_len=None,
-            embeds=None):
+            embeds=None, collect_kv=False):
     """tokens (B,S) -> vocab-sharded logits (B,S,Vp), new cache, metrics.
 
     ``embeds``: precomputed frontend embeddings (modality stubs) added after
     lookup — for the chameleon VQ stub tokens suffice; seamless uses encdec.py.
+
+    ``cache_len`` may be a scalar (homogeneous batch) or a per-slot (B,)
+    vector — the serving engine's slot-paged decode, where every sequence in
+    the batch sits at its own position. ``collect_kv`` makes the cache-less
+    (prefill) path return the per-layer K/V stack instead of None, for
+    insertion into a live decode cache.
     """
     moe_exec = moe_mod.pick_exec_mode(cfg, rt) if cfg.n_experts else "tp"
     b, s = tokens.shape
@@ -269,8 +296,11 @@ def forward(params, tokens, *, cfg, rt, cache=None, cache_len=None,
     if cache_len is None and cache is None:
         positions = jnp.arange(s)
     else:
-        base = cache_len if cache_len is not None else 0
-        positions = base + jnp.arange(s)
+        base = jnp.asarray(cache_len if cache_len is not None else 0)
+        if base.ndim == 1:
+            positions = base[:, None] + jnp.arange(s)[None, :]   # (B, S)
+        else:
+            positions = base + jnp.arange(s)
 
     remat = rt.run_cfg.remat
     policy = None if remat == "full" else \
@@ -283,7 +313,8 @@ def forward(params, tokens, *, cfg, rt, cache=None, cache_len=None,
             return x, (new_carry, {})
         x, new_cache, metrics = decoder_layer(
             p, x, cfg=cfg, rt=rt, positions=positions,
-            layer_cache=layer_cache, cache_len=cache_len, moe_exec=moe_exec)
+            layer_cache=layer_cache, cache_len=cache_len, moe_exec=moe_exec,
+            collect_kv=collect_kv)
         return x, (new_cache, metrics)
 
     if cache is None and cfg.family == "ssm":
@@ -295,6 +326,15 @@ def forward(params, tokens, *, cfg, rt, cache=None, cache_len=None,
             layer_fn = jax.checkpoint(layer_fn, policy=policy)
         xs = (params["layers"], cache)
         x, (new_cache, metrics) = jax.lax.scan(layer_fn, x, xs)
+    elif collect_kv:
+        # batched prefill: the scan stacks each layer's (K, V) into the
+        # (n_layers, B, S, KV, hd) decode-cache layout
+        def kv_fn(x, p):
+            x, out = layer_fn(x, (p, None))
+            return x, out
+        if remat in ("block", "full"):
+            kv_fn = jax.checkpoint(kv_fn, policy=policy)
+        x, (new_cache, metrics) = jax.lax.scan(kv_fn, x, params["layers"])
     else:
         def no_cache_fn(x, p):
             x, (_, metrics) = layer_fn(x, (p, None))

@@ -1,26 +1,82 @@
-"""Batched serving loop: continuous-batching-lite over the decode step.
+"""Serving engine: batched prefill + persistent slot-paged decode.
 
-Requests enter a queue; the server packs up to ``max_batch`` sequences into
-the fixed decode batch (padding unused slots), prefills new arrivals, and
-steps the shared KV cache. Slot lifecycle (free -> prefilling -> decoding ->
-done) is host-side; device work is exactly the two jitted functions from
-core/transform.py (prefill_step, decode_step), so the same plan/shardings
-as the dry-run serve cells apply.
+The engine (``Server``) runs continuous batching along the lines of
+MaxText/JetStream's offline inference engine:
+
+  admission   one ``prefill_step`` dispatch per request — the full forward
+              over the bucket-padded prompt collects every layer's K/V and
+              inserts the rows into the live decode cache at the request's
+              slot, samples the first token on device, and sets the slot's
+              length. jit-cached per power-of-two prompt-length bucket, so
+              admission costs one dispatch instead of prompt_len.
+  decode      one jitted step over the whole batch with *per-slot* device
+              state: a (B,) length vector (each slot masks exactly its own
+              valid cache prefix — a reused slot never attends over a
+              previous request's stale rows), a (B,1) pending-token buffer
+              fed straight from the previous step's device-side sample
+              (greedy or temperature, ``ServerConfig.greedy``), and a
+              host-provided occupancy mask.
+  host work   a staging thread pads/buckets queued prompts off the critical
+              path; a detokenize thread materializes sampled tokens,
+              records TTFT/per-token latency, and flags completions — the
+              decode loop itself never blocks on device->host copies.
+
+Slot lifecycle: free -> prefilling (one dispatch) -> decoding -> done
+(detok thread flags it) -> freed (next ``step()`` reuses it). A completed
+slot keeps idling in the batch until reused: the active mask freezes its
+length and token, and the next prefill overwrites its rows.
+
+The serve path is sparse-planned: the engine runs ``analyze()`` at the
+decode ShapeConfig, so every embedding table gets its own method/capacity/
+wire dtype at serve batch sizes (a skewed vocab table rides the ps_gather
+pull while a near-dense table is replicated for the dense local gather),
+and ``Plan.tables()`` carries the serve-mesh pricing (per-token exchange
+seconds at decode batch shapes, cost_model.serve_table_pricing).
+
+``ToyServer`` is the pre-engine loop (teacher-forced token-at-a-time
+prefill through the shared decode step, one shared cache_len, host-side
+argmax) — kept as the benchmark baseline and for recurrent families whose
+carry cannot be bucket-prefilled exactly under padding.
 """
 from __future__ import annotations
 
+import contextlib
+import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core.runtime import Runtime
-from repro.core.transform import analyze, make_decode_step
+from repro.core.transform import (analyze, make_decode_step,
+                                  make_serve_decode_step,
+                                  make_serve_prefill_step)
 from repro.models.model import build_model
+
+MIN_BUCKET = 8
+
+
+def bucket_len(prompt_len: int, max_seq: int, lo: int = MIN_BUCKET) -> int:
+    """Power-of-two prompt-length bucket (capped at the cache length)."""
+    b = lo
+    while b < prompt_len:
+        b *= 2
+    return min(b, max_seq)
+
+
+def prefill_buckets(max_seq: int, lo: int = MIN_BUCKET) -> list[int]:
+    """Every bucket a ``max_seq`` engine can trace (check_env reporting)."""
+    out, b = [], lo
+    while b < max_seq:
+        out.append(b)
+        b *= 2
+    return out + [max_seq]
 
 
 @dataclass
@@ -30,16 +86,275 @@ class Request:
     max_new_tokens: int = 16
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    # ---- timing (seconds, time.perf_counter clock) ----
+    t_submit: float = 0.0
+    t_first: float = 0.0          # first generated token materialized (TTFT)
+    token_times: list = field(default_factory=list)
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_submit if self.t_first else float("inf")
 
 
 @dataclass
 class ServerConfig:
     max_batch: int = 8
     max_seq: int = 256
-    greedy: bool = True
+    greedy: bool = True           # device-side argmax; False -> temperature
+    temperature: float = 1.0      # categorical sampling when greedy=False
 
 
 class Server:
+    """The rebuilt engine: batched prefill, slot-paged decode, threaded
+    admission/detokenization. Requires a family with a positional KV cache
+    (``model.prefill_cache_fn``); recurrent families use ``ToyServer``."""
+
+    def __init__(self, model_cfg: ModelConfig, run_cfg: RunConfig,
+                 scfg: ServerConfig, mesh=None, params=None, seed: int = 0):
+        shape = ShapeConfig("serve", scfg.max_seq, scfg.max_batch, "decode")
+        self.rt = Runtime(model_cfg, run_cfg, shape, mesh=mesh)
+        self.model = build_model(model_cfg, self.rt)
+        if self.model.prefill_cache_fn is None:
+            raise ValueError(
+                f"family {model_cfg.family!r} cannot be bucket-prefilled "
+                "exactly (recurrent carry under padding) — use ToyServer")
+        self.plan = analyze(self.model, self.rt)
+        self.rt.plan = self.plan
+        self.scfg = scfg
+        self.params = params if params is not None else \
+            self.model.init(jax.random.key(seed))
+
+        b, s = scfg.max_batch, scfg.max_seq
+        self.cache = self.model.init_cache(b, s)
+        self.lens = jnp.zeros((b,), jnp.int32)      # per-slot positions
+        self.tok = jnp.zeros((b, 1), jnp.int32)     # per-slot pending token
+        self._base_key = jax.random.key(seed + 1)
+        self._dispatches = 0
+
+        self.stats = {"prefill_calls": 0, "prefill_traces": 0,
+                      "decode_steps": 0, "decode_traces": 0,
+                      "buckets": set(), "cross_slot_mismatches": 0}
+        self._mesh_ctx = (lambda: compat.use_mesh(mesh)) if mesh is not None \
+            else contextlib.nullcontext
+
+        prefill = make_serve_prefill_step(
+            self.model, self.rt, self.plan, greedy=scfg.greedy,
+            temperature=scfg.temperature)
+        decode = make_serve_decode_step(
+            self.model, self.rt, self.plan, max_seq=s, greedy=scfg.greedy,
+            temperature=scfg.temperature)
+
+        def counted_prefill(*args):
+            self.stats["prefill_traces"] += 1     # trace-time side effect:
+            return prefill(*args)                 # fires once per bucket
+
+        def counted_decode(*args):
+            self.stats["decode_traces"] += 1
+            return decode(*args)
+
+        # one jit each: the executable cache keys on the padded token shape,
+        # so every power-of-two bucket traces exactly once
+        self._prefill = jax.jit(counted_prefill, donate_argnums=(1, 2, 3))
+        self._decode = jax.jit(counted_decode, donate_argnums=(1, 2, 3))
+
+        # ---- slot bookkeeping (host) ----
+        self.slot_req: list[Optional[Request]] = [None] * b
+        self.completed: list[Request] = []
+
+        # ---- threads: admission staging + detokenize/completion ----
+        self.queue: deque[Request] = deque()      # O(1) popleft
+        self._qcv = threading.Condition()
+        self._staged: deque[tuple] = deque()      # (req, padded, plen)
+        self._staging = 0                         # popped but not yet staged
+        self._pending = 0                         # submitted, not completed
+        self._freed: deque[int] = deque()         # slots to recycle
+        self._detok_q: deque[tuple] = deque()
+        self._detok_cv = threading.Condition()
+        self._inflight = 0
+        self._stop = False
+        self._thread_err: list[BaseException] = []
+        self._admitter = threading.Thread(target=self._admit_worker,
+                                          daemon=True)
+        self._detok = threading.Thread(target=self._detok_worker, daemon=True)
+        self._admitter.start()
+        self._detok.start()
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        if len(req.prompt) >= self.scfg.max_seq:
+            raise ValueError(f"prompt ({len(req.prompt)}) must leave room "
+                             f"for generation (max_seq {self.scfg.max_seq})")
+        req.t_submit = time.perf_counter()
+        with self._qcv:
+            self._pending += 1
+            self.queue.append(req)
+            self._qcv.notify()
+
+    def close(self):
+        self._stop = True
+        with self._qcv:
+            self._qcv.notify_all()
+        with self._detok_cv:
+            self._detok_cv.notify_all()
+
+    # ------------------------------------------------------------------
+    # admission staging thread: pad + bucket prompts off the decode path
+    def _admit_worker(self):
+        try:
+            while not self._stop:
+                with self._qcv:
+                    while not self.queue and not self._stop:
+                        self._qcv.wait(0.1)
+                    if self._stop:
+                        return
+                    req = self.queue.popleft()
+                    self._staging += 1
+                plen = len(req.prompt)
+                lb = bucket_len(plen, self.scfg.max_seq)
+                padded = np.zeros((1, lb), np.int32)
+                padded[0, :plen] = req.prompt
+                self._staged.append((req, padded, np.int32(plen)))
+                with self._qcv:
+                    self._staging -= 1
+        except BaseException as e:            # surface in the serve loop
+            self._thread_err.append(e)
+
+    # detokenize thread: the only place device results are materialized
+    def _detok_worker(self):
+        try:
+            while True:
+                with self._detok_cv:
+                    while not self._detok_q and not self._stop:
+                        self._detok_cv.wait(0.1)
+                    if self._detok_q:
+                        item = self._detok_q.popleft()
+                    elif self._stop:
+                        return
+                    else:
+                        continue
+                arr, mapping = item
+                vals = np.asarray(arr)        # blocks HERE, not in step()
+                now = time.perf_counter()
+                for idx, slot, req in mapping:
+                    if req.done:
+                        continue              # slot kept decoding past done
+                    tok = int(vals[idx])
+                    if tok < 0:
+                        # the decode step stamps -1 on inactive slots; one
+                        # in an active mapping means slot state leaked
+                        self.stats["cross_slot_mismatches"] += 1
+                        continue
+                    req.out_tokens.append(tok)
+                    req.token_times.append(now)
+                    if not req.t_first:
+                        req.t_first = now
+                    plen = len(req.prompt)
+                    if len(req.out_tokens) >= req.max_new_tokens or \
+                            plen + len(req.out_tokens) >= self.scfg.max_seq:
+                        req.done = True
+                        self.completed.append(req)
+                        self._freed.append(slot)
+                        with self._qcv:
+                            self._pending -= 1
+                with self._detok_cv:
+                    self._inflight -= 1
+                    self._detok_cv.notify_all()
+        except BaseException as e:
+            self._thread_err.append(e)
+
+    def _push_detok(self, arr, mapping):
+        with self._detok_cv:
+            self._detok_q.append((arr, mapping))
+            self._inflight += 1
+            self._detok_cv.notify()
+
+    def _check_threads(self):
+        if self._thread_err:
+            raise RuntimeError("server worker thread died") \
+                from self._thread_err[0]
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        if self.scfg.greedy:
+            return self._base_key              # unused inside the step
+        self._dispatches += 1
+        return jax.random.fold_in(self._base_key, self._dispatches)
+
+    def _admit(self) -> int:
+        """Dispatch one prefill per staged request into free slots."""
+        n = 0
+        for i in range(self.scfg.max_batch):
+            if self.slot_req[i] is not None or not self._staged:
+                continue
+            req, padded, plen = self._staged.popleft()
+            self.slot_req[i] = req
+            self.stats["prefill_calls"] += 1
+            self.stats["buckets"].add(padded.shape[1])
+            with self._mesh_ctx():
+                self.cache, self.lens, self.tok, first = self._prefill(
+                    self.params, self.cache, self.lens, self.tok,
+                    jnp.asarray(padded), plen, np.int32(i),
+                    self._next_key())
+            self._push_detok(first, [(0, i, req)])
+            n += 1
+        return n
+
+    def step(self) -> int:
+        """One engine iteration: recycle slots, admit, one decode dispatch.
+        Returns the number of active slots."""
+        self._check_threads()
+        while self._freed:
+            self.slot_req[self._freed.popleft()] = None
+        self._admit()
+        active_idx = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active_idx:
+            return 0
+        active = np.zeros(self.scfg.max_batch, bool)
+        active[active_idx] = True
+        with self._mesh_ctx():
+            self.cache, self.lens, self.tok, out = self._decode(
+                self.params, self.cache, self.lens, self.tok,
+                jnp.asarray(active), self._next_key())
+        self.stats["decode_steps"] += 1
+        self._push_detok(
+            out, [(i, i, self.slot_req[i]) for i in active_idx])
+        # bound the dispatch run-ahead so a lagging detokenizer can't let
+        # the loop burn steps decoding slots that already completed
+        with self._detok_cv:
+            while self._inflight > 2 * self.scfg.max_batch:
+                self._detok_cv.wait(0.05)
+        return len(active_idx)
+
+    def run_until_drained(self, max_iters: int = 10_000) -> list[Request]:
+        it = 0
+        while self._pending > 0 and it < max_iters:
+            if self.step() == 0:
+                # nothing on device: staging or detok is catching up
+                time.sleep(0.0002)
+                self._check_threads()
+            it += 1
+        # let in-flight detok finish so timings/completions are final
+        with self._detok_cv:
+            while self._inflight > 0 and not self._thread_err:
+                self._detok_cv.wait(0.1)
+        self._check_threads()
+        while self._freed:
+            self.slot_req[self._freed.popleft()] = None
+        return self.completed
+
+
+# ---------------------------------------------------------------------------
+# the pre-engine loop, kept as baseline + recurrent-family fallback
+# ---------------------------------------------------------------------------
+
+class ToyServer:
+    """Teacher-forced token-at-a-time prefill through the shared decode
+    step, one shared cache_len, host-side argmax — the loop the engine
+    replaced. Admission costs O(prompt_len) blocking dispatches that stall
+    every active slot, and the shared ``cache_len`` makes every slot attend
+    over ``slot_pos.max()`` positions; benchmarks/serve_bench.py measures
+    the contrast."""
+
     def __init__(self, model_cfg: ModelConfig, run_cfg: RunConfig,
                  scfg: ServerConfig, mesh=None, params=None, seed: int = 0):
         shape = ShapeConfig("serve", scfg.max_seq, scfg.max_batch, "decode")
@@ -53,22 +368,24 @@ class Server:
         self.cache = self.model.init_cache(scfg.max_batch, scfg.max_seq)
         self.decode_step = jax.jit(
             make_decode_step(self.model, self.rt, self.plan))
-        # slot bookkeeping
         self.slot_req: list[Optional[Request]] = [None] * scfg.max_batch
         self.slot_pos = np.zeros(scfg.max_batch, np.int32)
-        self.queue: list[Request] = []
+        self.queue: deque[Request] = deque()
         self.completed: list[Request] = []
         self._tokens = np.zeros((scfg.max_batch, 1), np.int32)
+        self.stats = {"prefill_calls": 0, "decode_steps": 0}
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def _admit(self):
         for i in range(self.scfg.max_batch):
             if self.slot_req[i] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 self.slot_req[i] = req
+                self.stats["prefill_calls"] += 1
                 # teacher-forced prefill: feed prompt tokens one by one
                 # through the decode step (cache fills as a side effect).
                 # Other active slots' pending tokens must survive the
@@ -104,11 +421,16 @@ class Server:
         if not active:
             return 0
         logits = self._step_device()
+        self.stats["decode_steps"] += 1
         nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        now = time.perf_counter()
         for i in active:
             req = self.slot_req[i]
             tok = int(nxt[i])
             req.out_tokens.append(tok)
+            req.token_times.append(now)
+            if not req.t_first:
+                req.t_first = now
             self.slot_pos[i] += 1
             self._tokens[i, 0] = tok
             if len(req.out_tokens) >= req.max_new_tokens or \

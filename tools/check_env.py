@@ -46,6 +46,7 @@ def collect() -> dict:
         "embed_impl_pallas": _probe_pallas(),
         "kernel_autotune": _autotune_status(),
         "fused_apply": _fused_apply_eligibility(),
+        "serving": _serve_eligibility(),
     }
     report["ok"] = bool(report["jax"]["supported"])
     return report
@@ -82,6 +83,28 @@ def _fused_apply_eligibility() -> dict:
     return {"eligible": not reasons, "blockers": reasons,
             "optimizer": cfg.optimizer,
             "requires": "bucketed dense exchange on a data-parallel mesh"}
+
+
+def _serve_eligibility() -> dict:
+    """What the rebuilt serving engine (runtime/server.py) gets on this
+    host: which families can take the batched-prefill path (a positional
+    KV cache — recurrent carries fall back to ToyServer), how many
+    prefill executables a default-sized engine would trace (one per
+    power-of-two length bucket), and whether sampling runs on device."""
+    from repro.runtime.server import MIN_BUCKET, ServerConfig, \
+        prefill_buckets
+    scfg = ServerConfig()
+    buckets = prefill_buckets(scfg.max_seq, MIN_BUCKET)
+    return {
+        "paged_families": ["dense", "moe", "vlm"],
+        "toy_fallback_families": ["lstm", "ssm", "hybrid", "encdec"],
+        "max_seq": scfg.max_seq,
+        "prefill_buckets": buckets,
+        "prefill_executables": len(buckets),
+        "sampling": ("device argmax" if scfg.greedy
+                     else f"device categorical @T={scfg.temperature}"),
+        "detokenize_thread": True,   # engine always runs host work off-path
+    }
 
 
 def _remesh_eligibility() -> dict:
@@ -229,6 +252,13 @@ def main() -> int:
           f"{at['heartbeats_comparable']}  eviction resolves {evict}  "
           f"probation/readmit={at['probation_readmit']}  "
           f"stale fallback=always (plan-level)")
+    sv = report["serving"]
+    print(f"serving: paged engine for {'/'.join(sv['paged_families'])} "
+          f"({sv['prefill_executables']} prefill buckets "
+          f"{sv['prefill_buckets']} at max_seq={sv['max_seq']}), "
+          f"sampling={sv['sampling']}, detokenize thread="
+          f"{'on' if sv['detokenize_thread'] else 'off'}; "
+          f"{'/'.join(sv['toy_fallback_families'])} -> ToyServer")
     print("PASS" if report["ok"] else
           "WARN: JAX older than the supported range — tier-1 results are "
           "not meaningful")
