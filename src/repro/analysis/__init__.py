@@ -1,0 +1,25 @@
+"""Static analysis: plan-contract checking and SPMD hygiene lint.
+
+Two passes over two artifacts:
+
+  * ``contract`` — diff a compiled train step's HLO against the collective
+    contract its :class:`~repro.core.plan.Plan` implies (bucket count and
+    wire sizes, two-level psum structure, sparse row-buffer pushes, the
+    overlap schedule, the single fused scalar psum).
+  * ``lint`` — AST rules over the repo source: version-dependent JAX mesh
+    APIs stay inside ``repro.compat``, config dataclasses stay hashable,
+    custom_vjp identity taps stay bitwise-identity, raw collectives stay
+    inside the manual-region machinery.
+
+Both report :class:`~repro.analysis.findings.Finding` records; clean code
+produces an empty list.
+"""
+from repro.analysis.findings import Finding
+from repro.analysis.contract import (ContractViolation, check_contract,
+                                     verify_step_contract)
+from repro.analysis.lint import lint_file, lint_paths, lint_repo
+
+__all__ = [
+    "Finding", "ContractViolation", "check_contract",
+    "verify_step_contract", "lint_file", "lint_paths", "lint_repo",
+]

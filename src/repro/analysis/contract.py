@@ -1,0 +1,267 @@
+"""Diff a compiled step's collectives against its Plan's contract.
+
+The planner (core/plan.py + core/buckets.py) decides how every gradient
+moves; this pass verifies the compiled program actually implements that
+decision. Expected side: ``Plan.exchange_contract()`` — per-bucket
+(kind, element-count) sequences, the overlap mode, and each sparse
+table's method/capacity. Observed side: ``utils/hlo.scheduled_events``
+on the ENTRY schedule (position = execution order on scheduled modules)
+plus module-wide ``analyze_hlo`` counts for what hides inside loop
+bodies.
+
+Matching is by ELEMENT COUNT, not bytes or dtype: the CPU dry-run
+backend upcasts bf16 wires to f32 in the dumped HLO, but the counts
+survive the upcast unchanged. Wire-dtype conformance is therefore a
+separate opt-in check (``strict_dtype=True``, for backends that keep
+the wire dtype).
+
+What the checker knows (calibrated against the real lowering):
+
+  * each ring bucket is ONE fused all-reduce of exactly ``sum(sizes)``
+    elements — plus one pin element per gradient leaf when overlap is
+    off (the data-dependence pin in ``_exchange_bucket``);
+  * each two-level bucket is a consecutive reduce-scatter(E/L) →
+    all-reduce(E/L) → all-gather(E) triple, E padded to the local
+    replica count L;
+  * heartbeat/census scalars ride exactly ONE small fused psum;
+  * a gatherv table's exchange shows as row-buffer all-gathers
+    (elements a multiple of the replica count, at least
+    replicas x capacity) plus integer uid all-gathers;
+  * with overlap on, the first bucket collective is scheduled BEFORE
+    the last dot-bearing while loop; with overlap off the pin holds
+    every bucket collective until the backward has drained.
+"""
+from __future__ import annotations
+
+from repro.analysis.findings import Finding
+from repro.utils import hlo as H
+
+# HLO spelling of the jnp wire dtypes the planner hands out
+_WIRE_HLO = {"float32": "f32", "bfloat16": "bf16", "float16": "f16",
+             "float64": "f64"}
+_INT_DTYPES = {"s32", "u32", "s64", "u64"}
+
+# entry all-reduces at or under this many elements are metric scalars,
+# not gradient traffic (the fused census/heartbeat psum is tens of
+# elements; the smallest real bucket is thousands)
+SCALAR_MAX = 4096
+
+
+class ContractViolation(AssertionError):
+    """Raised by the verify gate when a compiled step breaks its plan."""
+
+    def __init__(self, findings):
+        self.findings = list(findings)
+        lines = "\n  ".join(str(f) for f in self.findings)
+        super().__init__(
+            f"compiled step violates its plan contract "
+            f"({len(self.findings)} finding(s)):\n  {lines}")
+
+
+def _match_elems(pool: list, kind: str, elems: int):
+    """Pop and return the first unclaimed event of ``kind`` moving exactly
+    ``elems`` elements, or None."""
+    for e in pool:
+        if e["collective"] == kind and e["elems"] == elems:
+            pool.remove(e)
+            return e
+    return None
+
+
+def _check_buckets(plan, events: list, strict_dtype: bool) -> tuple:
+    """Match per-bucket expected collectives against the ENTRY schedule.
+    -> (findings, matched bucket-event positions, leftover pool)."""
+    findings: list[Finding] = []
+    bp = plan.bucket_plan
+    contract = plan.exchange_contract()
+    n_leaves = contract["n_leaves"]
+    planned = bp.expected_collectives(n_leaves)
+    flipped = bp.expected_collectives(n_leaves, overlap=not bp.overlap)
+    pool = [e for e in events if e["collective"]]
+    positions: list[int] = []
+    for want, alt in zip(planned, flipped):
+        leaf = f"bucket[{want['bucket']}]"
+        hlo_dtype = _WIRE_HLO.get(want["dtype"], want["dtype"])
+        for (kind, elems), (akind, aelems) in zip(want["collectives"],
+                                                  alt["collectives"]):
+            ev = _match_elems(pool, kind, elems)
+            if ev is None and aelems != elems:
+                ev = _match_elems(pool, kind, aelems)
+                if ev is not None:
+                    findings.append(Finding(
+                        "schedule", where=ev["name"], plan_leaf=leaf,
+                        expected=f"{kind} of {elems} elems "
+                                 f"(overlap={bp.overlap})",
+                        actual=f"{aelems} elems (pin for "
+                               f"overlap={not bp.overlap})",
+                        message="pin elements show the step was compiled "
+                                "under the opposite overlap mode"))
+            if ev is None:
+                findings.append(Finding(
+                    "missing-collective", plan_leaf=leaf,
+                    expected=f"{kind} of {elems} elems ({want['dtype']})",
+                    actual="no matching collective in ENTRY schedule"))
+                continue
+            positions.append(ev["pos"])
+            if strict_dtype and ev["dtype"] != hlo_dtype:
+                findings.append(Finding(
+                    "wire-dtype", where=ev["name"], plan_leaf=leaf,
+                    expected=hlo_dtype, actual=str(ev["dtype"]),
+                    message="collective rides the wrong wire dtype"))
+    return findings, positions, pool
+
+
+def _check_sparse(plan, pool: list) -> list:
+    """Presence of each gatherv table's row-buffer collectives; claims the
+    matching all-gathers so they are not misread as dense traffic."""
+    findings: list[Finding] = []
+    bp = plan.bucket_plan
+    replicas = bp.replicas if bp is not None else 1
+    for name, t in plan.exchange_contract()["tables"].items():
+        if t["method"] != "mpi_gatherv":
+            continue
+        cap = max(t["capacity"], 1)
+        rows, uids = [], []
+        for e in list(pool):
+            if e["collective"] != "all-gather":
+                continue
+            if e["dtype"] in _INT_DTYPES:
+                # uid buffer: (replicas, capacity[+1]) ids
+                if e["elems"] % replicas == 0 and e["elems"] >= replicas:
+                    uids.append(e)
+                    pool.remove(e)
+            elif (e["elems"] % replicas == 0
+                  and e["elems"] >= replicas * cap):
+                # row buffer: (replicas, capacity[+1], row width)
+                rows.append(e)
+                pool.remove(e)
+        if not rows:
+            findings.append(Finding(
+                "missing-sparse-collective", plan_leaf=name,
+                expected=f"row-buffer all-gather >= {replicas}x{cap} rows",
+                actual="none in ENTRY schedule",
+                message="gatherv table exchange not found"))
+        if not uids:
+            findings.append(Finding(
+                "missing-sparse-collective", plan_leaf=name,
+                expected="integer uid all-gather",
+                actual="none in ENTRY schedule",
+                message="gatherv uid exchange not found"))
+    return findings
+
+
+def _check_scalars(pool: list) -> list:
+    """Exactly one small fused psum carries every metric scalar."""
+    findings: list[Finding] = []
+    small = [e for e in pool
+             if e["collective"] == "all-reduce" and e["elems"] <= SCALAR_MAX]
+    if not small:
+        findings.append(Finding(
+            "missing-collective", plan_leaf="metrics",
+            expected="one fused scalar psum (<= "
+                     f"{SCALAR_MAX} elems)", actual="none"))
+    for e in small[1:]:
+        findings.append(Finding(
+            "unfused-scalars", where=e["name"],
+            expected="one fused scalar psum",
+            actual=f"extra {e['elems']}-elem all-reduce",
+            message="metric scalars must ride a single fused psum"))
+    for e in small:
+        pool.remove(e)
+    large = [e for e in pool if e["collective"] == "all-reduce"]
+    for e in large:
+        findings.append(Finding(
+            "unexpected-collective", where=e["name"],
+            expected="no all-reduce outside the bucket contract",
+            actual=f"{e['elems']}-elem all-reduce ({e['dtype']})",
+            message="gradient traffic outside the planned buckets"))
+    return findings
+
+
+def _check_schedule(plan, text: str, positions: list) -> list:
+    """Overlap placement: first bucket collective vs last dot-bearing
+    loop in the ENTRY schedule."""
+    bp = plan.bucket_plan
+    sched = H.dot_bearing_events(text)
+    if not positions or sched["last_loop"] is None:
+        return []  # nothing to order against (non-scanning model)
+    first = min(positions)
+    last = sched["last_loop"]
+    # with one bucket the fused collective only becomes ready once every
+    # gradient exists — after the whole backward — so overlap can place
+    # nothing early; the before-the-last-loop guarantee needs >= 2 buckets
+    if bp.overlap and len(bp.buckets) >= 2 and first > last:
+        return [Finding(
+            "schedule", plan_leaf="bucket[0]",
+            expected="first bucket collective scheduled before the last "
+                     "dot-bearing loop (overlap=True)",
+            actual=f"first collective at pos {first}, last loop at {last}",
+            message="exchange does not overlap the backward")]
+    if not bp.overlap and first < last:
+        return [Finding(
+            "schedule", plan_leaf="bucket[0]",
+            expected="every bucket collective after the last dot-bearing "
+                     "loop (overlap=False pin)",
+            actual=f"first collective at pos {first}, last loop at {last}",
+            message="pinned exchange issued mid-backward")]
+    return []
+
+
+def _check_module_counts(plan, text: str) -> list:
+    """Module-wide totals — catches gradient collectives hidden inside
+    while bodies where the ENTRY schedule cannot see them."""
+    findings: list[Finding] = []
+    summary = H.analyze_hlo(text)
+    observed = summary.collective_count.get("all-reduce", 0)
+    bp = plan.bucket_plan
+    if bp is not None:
+        expected = len(bp.buckets) + 1  # one psum per bucket + scalar psum
+        if observed > expected:
+            findings.append(Finding(
+                "collective-count", plan_leaf="dense",
+                expected=f"{expected} all-reduces "
+                         f"({len(bp.buckets)} buckets + 1 scalar psum)",
+                actual=f"{observed:g} module-wide",
+                message="more all-reduces than the bucket plan allows"))
+    else:
+        # unbucketed: at least one all-reduce per allreduce-method leaf
+        # (XLA fuses nothing for us here; loop trip counts multiply)
+        n_ar = plan.methods().get("allreduce", 0)
+        if n_ar and sum(summary.collective_count.values()) == 0:
+            findings.append(Finding(
+                "missing-collective", plan_leaf="dense",
+                expected=f">= 1 collective for {n_ar} allreduce leaves",
+                actual="no collectives in module",
+                message="unbucketed dense exchange absent"))
+    return findings
+
+
+def check_contract(plan, hlo_text: str, *,
+                   strict_dtype: bool = False) -> list:
+    """Diff the compiled step (``compiled.as_text()``) against ``plan``.
+
+    Returns a list of :class:`Finding` — empty when the program
+    implements the plan. ``strict_dtype`` additionally requires each
+    bucket collective to ride the planned wire dtype in HLO (off by
+    default: the CPU dry-run upcasts bf16 collectives to f32)."""
+    findings: list[Finding] = []
+    bp = plan.bucket_plan
+    if bp is not None and H.is_scheduled(hlo_text):
+        events = H.scheduled_events(hlo_text)
+        bfinds, positions, pool = _check_buckets(plan, events, strict_dtype)
+        findings += bfinds
+        findings += _check_sparse(plan, pool)
+        findings += _check_scalars(pool)
+        findings += _check_schedule(plan, hlo_text, positions)
+    findings += _check_module_counts(plan, hlo_text)
+    return findings
+
+
+def verify_step_contract(plan, hlo_text: str, *,
+                         strict_dtype: bool = False) -> None:
+    """The post-build debug gate (``RunConfig.verify_contract``): raise
+    :class:`ContractViolation` when the compiled step's collectives do
+    not implement the plan."""
+    findings = check_contract(plan, hlo_text, strict_dtype=strict_dtype)
+    if findings:
+        raise ContractViolation(findings)

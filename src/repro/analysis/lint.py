@@ -1,0 +1,316 @@
+"""AST lint: the SPMD hygiene rules the repo enforces piecemeal today.
+
+Four rules, each reported as a :class:`~repro.analysis.findings.Finding`
+with ``kind`` = the rule id and ``where`` = ``path:line``:
+
+``jax-mesh-api``
+    Version-dependent mesh/sharding/shard_map APIs must be reached
+    through ``repro.compat``, never imported from ``jax`` directly —
+    outside the ``compat`` package itself. Generalizes the regex gate in
+    ``tests/test_compat.py`` (which only bans the spellings that differ
+    across JAX versions) to the whole API family.
+
+``unhashable-config-field``
+    ``RunConfig`` instances key plan/compile caches, so every field must
+    be hashable: annotations and defaults may not use list/dict/set.
+
+``tap-fwd-not-identity``
+    A ``custom_vjp`` whose primal is an identity tap (returns its inputs
+    untouched — the bucket-exchange taps in ``core/buckets.py``) must
+    keep its ``fwd`` bitwise-identity too: the fwd's primal output may
+    only repackage parameter names, never cast or transform them, or the
+    tapped and untapped steps stop being bit-identical.
+
+``raw-collective``
+    ``psum``/``psum_scatter`` are manual-region primitives; calls belong
+    only to the modules that implement the manual exchange machinery
+    (``MANUAL_COLLECTIVE_MODULES``). Everything else must express
+    reductions through the planner so the contract checker can account
+    for them.
+
+The rules are AST-based on purpose: ``tests/test_compat.py`` regex-scans
+raw file text (including strings and comments), so this module must
+detect the forbidden spellings without ever containing them.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.findings import Finding
+
+# modules allowed to call raw psum/psum_scatter: the manual-region
+# exchange machinery itself (runtime.py owns the region flag; these run
+# inside it) plus the collective microbenchmark tool
+MANUAL_COLLECTIVE_MODULES = (
+    "src/repro/core/runtime.py",
+    "src/repro/core/buckets.py",
+    "src/repro/core/embedding.py",
+    "src/repro/core/sp.py",
+    "src/repro/core/xent.py",
+    "src/repro/models/moe.py",
+    "tools/profile_collectives.py",
+)
+
+# names that must come from repro.compat (assembled, never spelled as
+# "jax.<name>" — see module docstring)
+_MESH_NAMES = {"sharding", "make_mesh", "set_mesh", "shard_map"}
+_JAX_SHARDING = "jax" + "." + "sharding"
+_JAX_SHMAP = "jax" + "." + "experimental" + "." + "shard_map"
+_COLLECTIVE_CALLS = {"psum", "psum_scatter"}
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of an attribute chain rooted at a Name, else ''."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_compat(path: str) -> bool:
+    norm = path.replace(os.sep, "/")
+    return "/compat/" in norm or norm.endswith("/compat")
+
+
+def _rel(path: str, root: str | None) -> str:
+    if root:
+        try:
+            return os.path.relpath(path, root).replace(os.sep, "/")
+        except ValueError:
+            pass
+    return path.replace(os.sep, "/")
+
+
+# ---------------------------------------------------------------------------
+# rule: jax-mesh-api
+# ---------------------------------------------------------------------------
+
+def _check_mesh_api(tree: ast.AST, path: str) -> list:
+    findings = []
+
+    def flag(node, what):
+        findings.append(Finding(
+            "jax-mesh-api", where=f"{path}:{node.lineno}",
+            expected="import from repro.compat", actual=what,
+            message="version-dependent mesh/sharding API outside compat"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            if node.module in (_JAX_SHARDING, _JAX_SHMAP):
+                flag(node, f"from {node.module} import ...")
+            elif node.module == "jax" and any(
+                    a.name in _MESH_NAMES for a in node.names):
+                names = [a.name for a in node.names
+                         if a.name in _MESH_NAMES]
+                flag(node, f"from jax import {', '.join(names)}")
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name in (_JAX_SHARDING, _JAX_SHMAP):
+                    flag(node, f"import {a.name}")
+        elif isinstance(node, ast.Attribute):
+            chain = _attr_chain(node)
+            if chain.startswith(_JAX_SHARDING) or chain in (
+                    _JAX_SHMAP,
+                    "jax." + "make_mesh",
+                    "jax." + "set_mesh",
+                    "jax." + "shard_map"):
+                flag(node, chain)
+    # attribute chains nest (jax.sharding.X contains jax.sharding): one
+    # finding per line is enough
+    seen, out = set(), []
+    for f in findings:
+        if f.where not in seen:
+            seen.add(f.where)
+            out.append(f)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule: unhashable-config-field
+# ---------------------------------------------------------------------------
+
+_UNHASHABLE = {"list", "List", "dict", "Dict", "set", "Set"}
+
+
+def _annotation_unhashable(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in _UNHASHABLE:
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr in _UNHASHABLE:
+            return True
+    return False
+
+
+def _check_config_hashable(tree: ast.AST, path: str) -> list:
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.ClassDef) and node.name == "RunConfig"):
+            continue
+        for stmt in node.body:
+            if not isinstance(stmt, ast.AnnAssign):
+                continue
+            fname = getattr(stmt.target, "id", "?")
+            bad = _annotation_unhashable(stmt.annotation)
+            if not bad and stmt.value is not None:
+                bad = isinstance(stmt.value,
+                                 (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                                  ast.DictComp, ast.SetComp))
+            if bad:
+                findings.append(Finding(
+                    "unhashable-config-field",
+                    where=f"{path}:{stmt.lineno}", plan_leaf=fname,
+                    expected="hashable field type (tuple, not list/dict)",
+                    actual=ast.unparse(stmt.annotation),
+                    message="RunConfig keys plan/compile caches"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: tap-fwd-not-identity
+# ---------------------------------------------------------------------------
+
+def _is_custom_vjp(dec: ast.AST) -> bool:
+    chain = _attr_chain(dec)
+    return chain.endswith("custom_vjp")
+
+
+def _identity_return(fn: ast.FunctionDef) -> bool:
+    """Does the function just return (a tuple of) its own parameters?"""
+    params = {a.arg for a in fn.args.args}
+    rets = [s for s in fn.body if isinstance(s, ast.Return)]
+    if len(rets) != 1 or rets[0].value is None:
+        return False
+
+    def pure(node):
+        if isinstance(node, ast.Name):
+            return node.id in params
+        if isinstance(node, ast.Tuple):
+            return all(pure(e) for e in node.elts)
+        return False
+
+    return pure(rets[0].value)
+
+
+def _primal_pure(node: ast.AST, params: set) -> bool:
+    """Is an fwd's primal-output expression a pure repackaging of
+    parameter names (no casts, ops, or calls)?"""
+    if isinstance(node, ast.Name):
+        return node.id in params
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return all(_primal_pure(e, params) for e in node.elts)
+    return False
+
+
+def _check_tap_identity(tree: ast.AST, path: str) -> list:
+    findings = []
+    # collect every function def by name per enclosing scope walk; names
+    # are unique enough within the factories that define taps
+    fns = {n.name: n for n in ast.walk(tree)
+           if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    taps = {name for name, fn in fns.items()
+            if any(_is_custom_vjp(d) for d in fn.decorator_list)
+            and _identity_return(fn)}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "defvjp"):
+            continue
+        target = _attr_chain(node.func.value)
+        if target not in taps or not node.args:
+            continue
+        fwd_name = node.args[0].id if isinstance(node.args[0], ast.Name) \
+            else None
+        fwd = fns.get(fwd_name)
+        if fwd is None:
+            continue
+        params = {a.arg for a in fwd.args.args}
+        for ret in [s for s in ast.walk(fwd) if isinstance(s, ast.Return)]:
+            val = ret.value
+            primal = val.elts[0] if isinstance(val, ast.Tuple) and val.elts \
+                else val
+            if primal is not None and not _primal_pure(primal, params):
+                findings.append(Finding(
+                    "tap-fwd-not-identity",
+                    where=f"{path}:{ret.lineno}", plan_leaf=target,
+                    expected="fwd returns the primal inputs untouched",
+                    actual=ast.unparse(primal),
+                    message="identity-tap fwd must keep bitwise-identity "
+                            "residuals"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# rule: raw-collective
+# ---------------------------------------------------------------------------
+
+def _check_raw_collectives(tree: ast.AST, path: str, rel: str) -> list:
+    if any(rel.endswith(m) for m in MANUAL_COLLECTIVE_MODULES):
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = None
+        if isinstance(node.func, ast.Attribute):
+            name = node.func.attr
+        elif isinstance(node.func, ast.Name):
+            name = node.func.id
+        if name in _COLLECTIVE_CALLS:
+            findings.append(Finding(
+                "raw-collective", where=f"{path}:{node.lineno}",
+                expected="collectives only inside the manual-region "
+                         "machinery", actual=f"{name}(...)",
+                message="raw collective outside MANUAL_COLLECTIVE_MODULES"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def lint_file(path: str, root: str | None = None) -> list:
+    """Run every rule over one file -> findings (empty = clean)."""
+    rel = _rel(path, root)
+    if _is_compat(rel):
+        return []
+    try:
+        with open(path, encoding="utf-8") as f:
+            tree = ast.parse(f.read(), filename=path)
+    except SyntaxError as e:
+        return [Finding("syntax-error", where=f"{path}:{e.lineno}",
+                        actual=str(e.msg))]
+    findings = []
+    findings += _check_mesh_api(tree, rel)
+    findings += _check_config_hashable(tree, rel)
+    findings += _check_tap_identity(tree, rel)
+    findings += _check_raw_collectives(tree, rel, rel)
+    return findings
+
+
+def lint_paths(paths, root: str | None = None) -> list:
+    """Lint every ``.py`` under the given files/directories."""
+    findings = []
+    for p in paths:
+        if os.path.isfile(p):
+            findings += lint_file(p, root)
+            continue
+        for dirpath, _, names in os.walk(p):
+            for name in sorted(names):
+                if name.endswith(".py"):
+                    findings += lint_file(os.path.join(dirpath, name), root)
+    return findings
+
+
+def lint_repo(root: str | None = None) -> list:
+    """Lint the repo's source trees: ``src/``, ``benchmarks/``,
+    ``tools/`` (tests keep their own gates)."""
+    if root is None:
+        root = os.path.abspath(
+            os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    paths = [os.path.join(root, d) for d in ("src", "benchmarks", "tools")]
+    return lint_paths([p for p in paths if os.path.isdir(p)], root)

@@ -247,6 +247,12 @@ class RunConfig:
     # the age any applied sparse gradient may reach (asserted in-graph via
     # the ``staleness_violation`` metric).
     max_staleness: int = 0
+    # post-build debug gate (analysis/contract.py): after every step
+    # compile — including replans and remeshes — diff the compiled HLO's
+    # collectives against the plan's exchange contract and raise
+    # ContractViolation on mismatch. Costs one as_text() per build; off by
+    # default.
+    verify_contract: bool = False
 
 
 def reduced(cfg: ModelConfig, *, layers: int = 2, d_model: int = 64,

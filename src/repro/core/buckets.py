@@ -147,6 +147,39 @@ class BucketPlan:
                 ring * self.wire_bytes, self.n_params, hw, tier=tier),
         }
 
+    def expected_collectives(self, n_leaves: int = 0,
+                             overlap: bool | None = None) -> list:
+        """The dense-exchange collective contract per bucket, as
+        (kind, element-count) pairs in issue order — what the compiled
+        step's ENTRY schedule must contain for this plan. Element counts
+        (not bytes) because the CPU dry-run upcasts bf16 wires to f32 in
+        HLO while the counts survive unchanged.
+
+        ``n_leaves``: total gradient leaves in the step — the
+        ``overlap=False`` pin appends one element per leaf to every
+        bucket's psum input (see ``_exchange_bucket``), so the observed
+        collectives grow by exactly that much when overlap is off.
+        ``overlap`` overrides the plan's own mode — the contract checker
+        uses the flipped variant to recognize (and report) a step compiled
+        under the wrong schedule instead of failing to match at all."""
+        if overlap is None:
+            overlap = self.overlap
+        pin = 0 if overlap else n_leaves
+        out = []
+        for k, b in enumerate(self.buckets):
+            elems = sum(b.sizes) + pin
+            if b.schedule == "two_level":
+                local = max(self.dims.local_replicas, 1)
+                padded = elems + ((-elems) % local)
+                colls = [("reduce-scatter", padded // local),
+                         ("all-reduce", padded // local),
+                         ("all-gather", padded)]
+            else:
+                colls = [("all-reduce", elems)]
+            out.append({"bucket": k, "dtype": b.key[1],
+                        "schedule": b.schedule, "collectives": colls})
+        return out
+
 
 def _exchange_dtype(rt, p: Optional[ParamPlan] = None) -> Any:
     """The dtype a dense gradient rides the wire at — mirrors the OPSW cast

@@ -230,6 +230,36 @@ class Plan:
             "serve": self.table_serve.get(t),
         } for t, m in self.table_methods.items()}
 
+    def exchange_contract(self) -> dict:
+        """Everything ``analysis/contract.py`` needs to derive the expected
+        collective set of a compiled step from this plan alone: the
+        per-bucket dense collectives (kind + element count, in issue
+        order), the overlap mode, and each sparse table's method/capacity/
+        wire so the checker knows which row-buffer collectives to expect.
+        ``n_leaves`` is the gradient leaf count — the overlap=False pin
+        rides one element per leaf on every bucket psum."""
+        leaves = jax.tree.leaves(
+            self.params, is_leaf=lambda x: isinstance(x, ParamPlan))
+        n_leaves = len(leaves)
+        bp = self.bucket_plan
+        return {
+            "n_leaves": n_leaves,
+            "methods": self.methods(),
+            "bucketed": bp is not None,
+            "overlap": bool(bp.overlap) if bp is not None else False,
+            "replicas": bp.replicas if bp is not None else 1,
+            "buckets": (bp.expected_collectives(n_leaves)
+                        if bp is not None else []),
+            "n_sparse_push": bp.n_sparse_push if bp is not None else 0,
+            "tables": {t: {
+                "method": m,
+                "capacity": self.table_capacity.get(t, self.capacity),
+                "wire_dtype": jnp.dtype(self.table_wire[t]).name
+                if t in self.table_wire else None,
+                "stale": t in self.stale_tables,
+            } for t, m in self.table_methods.items()},
+        }
+
 
 def _drifted(old_cap: int, new_cap: int, factor: float) -> bool:
     hi = max(old_cap, new_cap)

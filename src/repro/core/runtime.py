@@ -13,7 +13,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.compat import Mesh, NamedSharding
 
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core.plan import MeshRules, Plan, default_rules

@@ -647,10 +647,28 @@ def build_step(model: Model, optimizer: Optimizer, rt: Runtime, plan: Plan,
                 bs["_heartbeat"] = _ns(plan.mesh, P(ba))
             step = jax.jit(step_fn, in_shardings=(shardings, bs),
                            out_shardings=(shardings, None), donate_argnums=0)
+            if getattr(rt.run_cfg, "verify_contract", False):
+                # debug gate: every build — fresh, replan, or remesh —
+                # must compile to the plan's collective contract before a
+                # single step runs (analysis/contract.py). The compile is
+                # cached, so the first step reuses it.
+                from repro.analysis.contract import verify_step_contract
+                verify_step_contract(
+                    plan, step.lower(state, _abstract_batch(model, rt))
+                    .compile().as_text())
     else:
         shardings = None
         step = jax.jit(step_fn, donate_argnums=0)
     return step, state, shardings
+
+
+def _abstract_batch(model: Model, rt: Runtime) -> dict:
+    """Global-shape ShapeDtypeStructs for lowering a step without data."""
+    specs = dict(model.input_specs())
+    if getattr(rt.run_cfg, "heartbeat", False):
+        specs["_heartbeat"] = jax.ShapeDtypeStruct((rt.replicas,),
+                                                   jnp.float32)
+    return specs
 
 
 def apply_replan(model: Model, optimizer: Optimizer, rt: Runtime,
@@ -720,6 +738,20 @@ class Runner:
         self.train_step, self.state, self.shardings = apply_replan(
             self.model, self.optimizer, self.rt, new_plan, self.state, diff)
         return diff
+
+    def check_contract(self, *, strict_dtype: bool = False) -> list:
+        """On-demand plan-contract check of the live step: lower/compile
+        against abstract inputs and diff the collectives against the
+        current plan (analysis/contract.py). Returns findings (empty =
+        the compiled step implements the plan)."""
+        from repro.analysis.contract import check_contract
+        if self.plan.mesh is None:
+            return []          # off-mesh: no collectives to contract
+        with compat.use_mesh(self.plan.mesh):
+            txt = self.train_step.lower(
+                self.state, _abstract_batch(self.model, self.rt)) \
+                .compile().as_text()
+        return check_contract(self.plan, txt, strict_dtype=strict_dtype)
 
 
 def get_runner(model_cfg: ModelConfig, shape_cfg: ShapeConfig,

@@ -169,7 +169,7 @@ def init_cache(cfg, rt, batch, cache_seq, enc_seq, dtype=jnp.bfloat16):
 
 
 def cache_pspec_tree(cfg, rt):
-    from jax.sharding import PartitionSpec as P
+    from repro.compat import P
     if rt.mesh is None:
         return None
     batch_axes = rt.rules.rules.get("batch")

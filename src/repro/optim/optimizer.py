@@ -161,7 +161,7 @@ def global_norm(grads, rt=None) -> jax.Array:
     leaves = jax.tree.leaves(grads)
     if rt is not None and not rt.run_cfg.opau and rt.mesh is not None:
         # naive placement baseline: replicate the aggregated grads first
-        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.compat import NamedSharding, P
         leaves = [jax.lax.with_sharding_constraint(
             g, NamedSharding(rt.mesh, P())) for g in leaves]
     return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))

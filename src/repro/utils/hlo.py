@@ -50,6 +50,48 @@ def _shape_bytes(type_str: str) -> int:
     return total
 
 
+def _result_type(kind: str, type_str: str) -> str:
+    """The *result* part of a collective's type string.
+
+    Async ``-start`` collectives are typed as a tuple aliasing the operand
+    with the result — e.g. ``all-gather-start`` prints
+    ``(f32[4,8], f32[32,8])`` = (operand, result). Summing every shape in
+    that tuple double-counts the wire traffic; the result half alone is
+    what the op moves. Sync collectives (and ``-start`` ops whose tuple is
+    a fused multi-operand result) pass through unchanged."""
+    if not kind.endswith("-start") or not type_str.startswith("("):
+        return type_str
+    shapes = _SHAPE_RE.findall(type_str)
+    if len(shapes) >= 2 and len(shapes) % 2 == 0:
+        half = shapes[len(shapes) // 2:]
+        return ", ".join(f"{d}[{dims}]" for d, dims in half)
+    return type_str
+
+
+def _shape_elems(type_str: str) -> int:
+    n = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        k = 1
+        if dims:
+            for d in dims.split(","):
+                k *= int(d)
+        n += k
+    return n
+
+
+def _shape_dtype(type_str: str) -> str | None:
+    """Dtype of the largest shape in a (possibly tuple) type string."""
+    best, best_n = None, -1
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        k = 1
+        if dims:
+            for d in dims.split(","):
+                k *= int(d)
+        if k > best_n:
+            best, best_n = dtype, k
+    return best
+
+
 def _shape_dims(type_str: str) -> list[int]:
     m = _SHAPE_RE.search(type_str)
     if not m:
@@ -102,7 +144,7 @@ _OP_RE = re.compile(
     r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+([a-z0-9\-]+)\(")
 _TRIP_RE = re.compile(r'"known_trip_count":\s*\{\s*"n":\s*"?(\d+)"?')
 _CALLED = re.compile(r"(?:body|condition|calls|to_apply)=\{?%?([\w.\-]+)")
-_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{?[0-9,{} ]*\}\}?)")
 
 
 def _ring_factor(kind: str, n: int) -> float:
@@ -115,10 +157,27 @@ def _ring_factor(kind: str, n: int) -> float:
     return 1.0  # permute / broadcast
 
 
-def _group_size(line: str) -> int:
+def _replica_groups(line: str) -> list[list[int]]:
+    """All replica groups on an op line, e.g. ``{{0,1},{2,3}}`` ->
+    [[0, 1], [2, 3]]. Handles the single-group ``{0,1,2}`` spelling and
+    unequal groups like ``{{0},{1,2,3}}``."""
     m = _GROUPS_RE.search(line)
-    if m:
-        return len(m.group(1).split(","))
+    if not m:
+        return []
+    body = m.group(1).replace(" ", "").strip("{}")
+    groups = []
+    for part in body.split("},{"):
+        part = part.strip("{} ")
+        if part:
+            groups.append([int(x) for x in part.split(",") if x.strip()])
+    return [g for g in groups if g]
+
+
+def _group_size(line: str) -> int:
+    groups = _replica_groups(line)
+    if groups:
+        # ring cost is set by the largest group the op participates in
+        return max(len(g) for g in groups)
     # replica_groups=[4,2]<=[8] style (iota tile assignment)
     m2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
     if m2:
@@ -259,7 +318,7 @@ def analyze_hlo(text: str, param_bytes: float = 0.0,
                     base = c
                     break
             if base is not None:
-                nbytes = _shape_bytes(op.type_str)
+                nbytes = _shape_bytes(_result_type(kind, op.type_str))
                 if "f32[" in op.type_str:
                     nbytes *= f32_collective_scale
                 n = _group_size(op.line)
@@ -313,7 +372,10 @@ def scheduled_events(text: str) -> list[dict]:
     *scheduled* HLO dump — once the module header says
     ``is_scheduled=true``, ``compiled.as_text()`` prints ops in schedule
     order, so text position IS execution position. Each event:
-    ``{pos, name, kind, collective: base-kind-or-None, bytes, grad_math}``.
+    ``{pos, name, kind, collective: base-kind-or-None, bytes, elems,
+    dtype, grad_math}`` — ``bytes``/``elems``/``dtype`` describe the
+    collective's *result* (``-start`` operand aliases excluded), so they
+    match plan-side wire sizes directly.
 
     ``grad_math`` catches matmul work however the backend lowered it: raw
     dot/dot-general ops, fusions and while loops whose called computations
@@ -339,11 +401,37 @@ def scheduled_events(text: str) -> list[dict]:
                             for cm in _CALLED.finditer(op.line))
         if not grad_math and op.kind == "custom-call":
             grad_math = bool(_MATMUL_CALL.search(op.line))
+        rtype = _result_type(op.kind, op.type_str) if coll else ""
         events.append({"pos": pos, "name": op.name, "kind": op.kind,
                        "collective": coll,
-                       "bytes": _shape_bytes(op.type_str) if coll else 0,
+                       "bytes": _shape_bytes(rtype) if coll else 0,
+                       "elems": _shape_elems(rtype) if coll else 0,
+                       "dtype": _shape_dtype(rtype) if coll else None,
                        "grad_math": grad_math})
     return events
+
+
+def dot_bearing_events(text: str, *, collective: str = "all-reduce",
+                       min_bytes: int = 0) -> dict:
+    """Scheduling summary shared by the overlap tests and the contract
+    checker: positions of the chosen collective kind (result payload >
+    ``min_bytes``) and of the dot-bearing while loops in the ENTRY
+    schedule. ``first_collective``/``last_loop`` are ``None`` when the
+    respective set is empty; comparing them answers "did the exchange
+    start before the backward drained?" without each caller re-deriving
+    grad-math detection."""
+    ev = scheduled_events(text)
+    colls = [e["pos"] for e in ev
+             if e["collective"] == collective and e["bytes"] > min_bytes]
+    loops = [e["pos"] for e in ev if e["kind"] == "while" and e["grad_math"]]
+    return {
+        "scheduled": is_scheduled(text),
+        "events": ev,
+        "collectives": colls,
+        "loops": loops,
+        "first_collective": min(colls) if colls else None,
+        "last_loop": max(loops) if loops else None,
+    }
 
 
 # backwards-compatible helpers --------------------------------------------

@@ -1,0 +1,8 @@
+"""Lint fixture: a direct jax.sharding import outside compat — the
+version-dependent API the compat layer exists to wrap. Must produce
+exactly ONE jax-mesh-api finding."""
+from jax.sharding import Mesh  # noqa: F401
+
+
+def make(devices):
+    return Mesh(devices, ("data",))

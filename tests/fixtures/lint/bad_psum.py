@@ -1,0 +1,8 @@
+"""Lint fixture: a raw lax.psum outside the manual-region machinery —
+gradient traffic the planner cannot account for. Must produce exactly
+ONE raw-collective finding."""
+import jax
+
+
+def aggregate(grad, axes):
+    return jax.lax.psum(grad, axes)  # the violation

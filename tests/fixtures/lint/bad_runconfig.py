@@ -1,0 +1,11 @@
+"""Lint fixture: a RunConfig with a list-typed field — unhashable, so it
+breaks plan/compile cache keys. Must produce exactly ONE
+unhashable-config-field finding."""
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    comm_mode: str = "hybrid"
+    table_alpha: tuple = ()
+    bucket_order: list = field(default_factory=list)  # the violation

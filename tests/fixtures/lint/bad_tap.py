@@ -1,0 +1,21 @@
+"""Lint fixture: a custom_vjp identity tap whose fwd casts its residuals
+— the tapped step is no longer bit-identical to the untapped one. Must
+produce exactly ONE tap-fwd-not-identity finding."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def tap(leaves, token):
+    return leaves
+
+
+def fwd(leaves, token):
+    return tuple(x.astype(jnp.float32) for x in leaves), None  # violation
+
+
+def bwd(_, cts):
+    return cts, None
+
+
+tap.defvjp(fwd, bwd)

@@ -1,0 +1,381 @@
+"""analysis/: the plan-contract checker and the SPMD hygiene lint.
+
+Fast half: lint rules on seeded fixture violations (exactly one finding
+each), repo-wide lint cleanliness, and the contract matcher on
+hand-built plans vs canned scheduled HLO. Distributed half: the checker
+passes clean on the config zoo across {bucketed, overlap on/off,
+fused-apply on/off, ps_gather sparse, two-level pod} and flags every
+seeded mutation (extra per-param AR, wrong wire dtype, overlap
+regression).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from conftest import distributed_run
+
+from repro.analysis.contract import check_contract
+from repro.analysis.lint import lint_file, lint_repo
+from repro.core.buckets import Bucket, BucketPlan
+from repro.core.plan import ParamPlan, Plan
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "lint")
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------------------
+# lint: each seeded violation -> exactly one finding of its rule
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture,kind", [
+    ("bad_mesh_import.py", "jax-mesh-api"),
+    ("bad_runconfig.py", "unhashable-config-field"),
+    ("bad_psum.py", "raw-collective"),
+    ("bad_tap.py", "tap-fwd-not-identity"),
+])
+def test_lint_fixture_single_finding(fixture, kind):
+    findings = lint_file(os.path.join(FIXTURES, fixture), ROOT)
+    assert len(findings) == 1, [str(f) for f in findings]
+    assert findings[0].kind == kind
+    assert fixture in findings[0].where
+
+
+def test_lint_repo_clean():
+    """The CI gate: src/, benchmarks/, tools/ carry zero violations."""
+    findings = lint_repo(ROOT)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_spmd_lint_cli():
+    tool = os.path.join(ROOT, "tools", "spmd_lint.py")
+    ok = subprocess.run([sys.executable, tool], capture_output=True,
+                        text=True, timeout=300)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    bad = subprocess.run([sys.executable, tool, "--json", FIXTURES],
+                         capture_output=True, text=True, timeout=300)
+    assert bad.returncode == 1
+    import json
+    findings = json.loads(bad.stdout)
+    assert {f["kind"] for f in findings} == {
+        "jax-mesh-api", "unhashable-config-field", "raw-collective",
+        "tap-fwd-not-identity"}
+
+
+# ---------------------------------------------------------------------------
+# contract matcher: hand-built plans vs canned scheduled HLO
+# ---------------------------------------------------------------------------
+
+def _plan(buckets, *, overlap=True, replicas=2, hosts=1, n_leaves=2):
+    bp = BucketPlan(buckets=buckets, batch_axes=("data",),
+                    replicas=replicas,
+                    n_params=sum(len(b.sizes) for b in buckets),
+                    wire_bytes=sum(b.nbytes for b in buckets),
+                    bucket_bytes=1 << 20, hosts=hosts, overlap=overlap)
+    params = [ParamPlan(f"p{i}", "allreduce", None, None, "float32",
+                        False, 4) for i in range(n_leaves)]
+    return Plan(model_cfg=None, run_cfg=None, shape_cfg=None, mesh=None,
+                rules=None, params=params, bucket_plan=bp)
+
+
+def _bucket(elems, *, dtype="float32", schedule="ring"):
+    return Bucket(key=("allreduce", dtype, ()), idx=(0,), sizes=(elems,),
+                  nbytes=elems * 4, schedule=schedule)
+
+
+_PRE = """HloModule m, is_scheduled=true
+
+%body (c: f32[8,8]) -> f32[8,8] {
+  %c = f32[8,8]{1,0} parameter(0)
+  ROOT %d = f32[8,8]{1,0} dot(%c, %c), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%cond (c: f32[8,8]) -> pred[] {
+  %c = f32[8,8]{1,0} parameter(0)
+  ROOT %q = pred[] constant(false)
+}
+
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+"""
+_POST = """  %scal = f32[5]{0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%add
+  ROOT %out = f32[8,8]{1,0} copy(%w)
+}
+"""
+_LOOP = "  %w = f32[8,8]{1,0} while(%p0), condition=%cond, body=%body\n"
+
+
+def _ar(name, elems, dtype="f32"):
+    return (f"  %{name} = {dtype}[{elems}]{{0}} all-reduce(%p0), "
+            "replica_groups={{0,1}}, to_apply=%add\n")
+
+
+def test_contract_clean_ring_bucket():
+    plan = _plan([_bucket(8192)])
+    text = _PRE + _ar("ar0", 8192) + _LOOP + _POST
+    assert check_contract(plan, text) == []
+
+
+def test_contract_missing_bucket_collective():
+    plan = _plan([_bucket(8192)])
+    text = _PRE + _LOOP + _POST          # bucket all-reduce absent
+    kinds = {f.kind for f in check_contract(plan, text)}
+    assert kinds == {"missing-collective"}
+
+
+def test_contract_flags_extra_per_param_all_reduce():
+    plan = _plan([_bucket(8192)])
+    text = _PRE + _ar("ar0", 8192) + _ar("extra", 9000) + _LOOP + _POST
+    kinds = {f.kind for f in check_contract(plan, text)}
+    assert "unexpected-collective" in kinds
+    assert "collective-count" in kinds
+
+
+def test_contract_flags_overlap_pin_mismatch():
+    # plan says overlap=False (pin: +n_leaves elems); HLO shows the
+    # unpinned overlap shape -> a schedule finding, not a failed match
+    plan = _plan([_bucket(8192)], overlap=False, n_leaves=2)
+    text = _PRE + _ar("ar0", 8192) + _LOOP + _POST
+    findings = check_contract(plan, text)
+    assert {f.kind for f in findings} == {"schedule"}, \
+        [str(f) for f in findings]
+
+
+def test_contract_overlap_scheduling_positions():
+    # two buckets, overlap=True: both all-reduces land AFTER the last
+    # dot-bearing loop -> the exchange does not overlap the backward
+    plan = _plan([_bucket(4096), _bucket(6144)])
+    late = _PRE + _LOOP + _ar("ar0", 4096) + _ar("ar1", 6144) + _POST
+    kinds = {f.kind for f in check_contract(plan, late)}
+    assert kinds == {"schedule"}
+    early = _PRE + _ar("ar0", 4096) + _LOOP + _ar("ar1", 6144) + _POST
+    assert check_contract(plan, early) == []
+
+
+def test_contract_two_level_triple():
+    plan = _plan([_bucket(8192, schedule="two_level")],
+                 replicas=4, hosts=2)
+    local = plan.bucket_plan.dims.local_replicas
+    piece = 8192 // local
+    text = (_PRE
+            + f"  %rs = f32[{piece}]{{0}} reduce-scatter(%p0), "
+              "replica_groups={{0,1}}, to_apply=%add\n"
+            + _ar("ar0", piece)
+            + f"  %ag = f32[8192]{{0}} all-gather(%rs), "
+              "replica_groups={{0,1}}, dimensions={0}\n"
+            + _LOOP + _POST)
+    assert check_contract(plan, text) == []
+    # dropping the inter-host hop breaks the triple
+    text2 = (_PRE + _ar("ar0", piece) + _LOOP + _POST)
+    kinds = {f.kind for f in check_contract(plan, text2)}
+    assert "missing-collective" in kinds
+
+
+def test_contract_strict_wire_dtype():
+    plan = _plan([_bucket(8192, dtype="bfloat16")])
+    text = _PRE + _ar("ar0", 8192) + _LOOP + _POST   # rides f32 in HLO
+    # default: the CPU dry-run upcast is accepted (match by element count)
+    assert check_contract(plan, text) == []
+    kinds = {f.kind for f in check_contract(plan, text, strict_dtype=True)}
+    assert kinds == {"wire-dtype"}
+
+
+def test_contract_unfused_scalars():
+    plan = _plan([_bucket(8192)])
+    text = (_PRE + _ar("ar0", 8192) + _LOOP
+            + _ar("extra_scalar", 3) + _POST)
+    findings = check_contract(plan, text)
+    assert {f.kind for f in findings} == {"unfused-scalars",
+                                          "collective-count"}
+
+
+# ---------------------------------------------------------------------------
+# distributed: the zoo sweep, the verify gate, and the seeded mutations
+# ---------------------------------------------------------------------------
+
+SWEEP_PRELUDE = """
+from repro.configs import get_config, reduced, RunConfig, ShapeConfig
+from repro.core.transform import get_runner
+from repro.data import SyntheticLM
+from repro.analysis.contract import check_contract
+
+shape = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
+BASE = dict(attention_impl="naive", remat="none", param_dtype="float32",
+            compute_dtype="float32", wire_dtype="float32")
+
+def probe(arch, mesh_shape=(8, 1), axes=("data", "model"), **flags):
+    cfg = reduced(get_config(arch))
+    ds = SyntheticLM(cfg.vocab_size, 32, 8, is_encdec=cfg.is_encdec,
+                     frames_dim=cfg.d_model, frames_len=8)
+    mesh = make_mesh(mesh_shape, axes)
+    with use_mesh(mesh):
+        run = get_runner(cfg, shape, RunConfig(**BASE, **flags), mesh=mesh)
+        txt = run.train_step.lower(
+            run.state, ds.batch(0)).compile().as_text()
+        bp = run.plan.bucket_plan
+        return {"buckets": len(bp.buckets) if bp else 0,
+                "methods": run.plan.table_methods,
+                "findings": [str(x) for x in check_contract(run.plan, txt)]}
+"""
+
+SWEEP_ENCDEC_CODE = SWEEP_PRELUDE + """
+out = {}
+out["default"] = probe("seamless-m4t-medium")
+out["no_overlap"] = probe("seamless-m4t-medium", overlap=False)
+out["no_fused"] = probe("seamless-m4t-medium", fused_apply=False,
+                        bucket_bytes=256 * 1024)
+out["gatherv"] = probe("seamless-m4t-medium", comm_mode="mpi",
+                       bucket_bytes=256 * 1024)
+print("RESULT:" + json.dumps(out))
+"""
+
+SWEEP_ZOO_CODE = SWEEP_PRELUDE + """
+out = {}
+for arch in ("phi3-medium-14b", "hymba-1.5b", "rwkv6-7b",
+             "command-r-35b", "stablelm-12b"):
+    out[arch] = probe(arch)
+out["unbucketed"] = probe("phi3-medium-14b", bucket_bytes=0)
+print("RESULT:" + json.dumps(out))
+"""
+
+SWEEP_SPARSE_POD_CODE = SWEEP_PRELUDE + """
+import tempfile
+with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as fp:
+    json.dump({"link_latency": 1e-9, "link_bw": 1e9}, fp)
+    hw_fast = fp.name
+with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as fp:
+    json.dump({"inter_bw": 12.5e9, "inter_latency": 10e-6}, fp)
+    hw_pod = fp.name
+out = {}
+# the Table-3 argmin flips the table to ps_gather under tiny alpha on a
+# latency-free link
+out["ps_gather"] = probe("phi3-medium-14b", mesh_shape=(2, 4),
+                         comm_mode="ps", hw_profile=hw_fast,
+                         table_alpha=(("embed", 0.01),))
+# pod mesh + slow inter tier: the bucket rides the two-level triple
+out["two_level"] = probe("seamless-m4t-medium", mesh_shape=(2, 4, 1),
+                         axes=("pod", "data", "model"), hw_profile=hw_pod,
+                         bucket_bytes=1024 * 1024)
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.distributed
+def test_contract_clean_on_encdec_variants():
+    res = distributed_run(SWEEP_ENCDEC_CODE, devices=8, timeout=900)
+    for name, r in res.items():
+        assert r["findings"] == [], (name, r)
+    assert res["no_fused"]["buckets"] >= 2
+    assert res["gatherv"]["methods"].get("embed") == "mpi_gatherv"
+
+
+@pytest.mark.distributed
+def test_contract_clean_on_config_zoo():
+    res = distributed_run(SWEEP_ZOO_CODE, devices=8, timeout=1200)
+    for name, r in res.items():
+        assert r["findings"] == [], (name, r)
+    assert res["unbucketed"]["buckets"] == 0
+    assert sum(r["buckets"] for r in res.values()) >= 5
+
+
+@pytest.mark.distributed
+def test_contract_clean_on_ps_gather_and_two_level():
+    res = distributed_run(SWEEP_SPARSE_POD_CODE, devices=8, timeout=900)
+    for name, r in res.items():
+        assert r["findings"] == [], (name, r)
+    assert res["ps_gather"]["methods"].get("embed") == "ps_gather"
+
+
+MUTATION_CODE = """
+import dataclasses
+from repro.configs import get_config, reduced, RunConfig, ShapeConfig
+from repro.core.transform import get_runner
+from repro.data import SyntheticLM
+from repro.analysis.contract import check_contract
+
+cfg = reduced(get_config("seamless-m4t-medium"))
+shape = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
+kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
+          compute_dtype="float32", wire_dtype="float32",
+          bucket_bytes=256 * 1024)
+ds = SyntheticLM(cfg.vocab_size, 32, 8, is_encdec=True,
+                 frames_dim=cfg.d_model, frames_len=8)
+
+def hlo(run):
+    return run.train_step.lower(run.state, ds.batch(0)).compile().as_text()
+
+mesh = make_mesh((8, 1), ("data", "model"))
+with use_mesh(mesh):
+    ov = get_runner(cfg, shape, RunConfig(**kw), mesh=mesh)
+    base = get_runner(cfg, shape, RunConfig(**kw, overlap=False), mesh=mesh)
+    flat = get_runner(cfg, shape, RunConfig(**dict(kw, bucket_bytes=0)),
+                      mesh=mesh)
+    t_ov, t_base, t_flat = hlo(ov), hlo(base), hlo(flat)
+    bp = ov.plan.bucket_plan
+    wrong_wire = dataclasses.replace(ov.plan, bucket_plan=dataclasses.replace(
+        bp, buckets=[dataclasses.replace(b, key=(b.key[0], "bfloat16",
+                                                 b.key[2]))
+                     for b in bp.buckets]))
+    res = {
+        "clean_ov": [str(x) for x in check_contract(ov.plan, t_ov)],
+        "clean_base": [str(x) for x in check_contract(base.plan, t_base)],
+        # overlap regression: overlap=False HLO against the overlap=True plan
+        "overlap_mut": sorted({x.kind
+                               for x in check_contract(ov.plan, t_base)}),
+        # extra per-param all-reduces: flat HLO against the bucketed plan
+        "extra_ar_mut": sorted({x.kind
+                                for x in check_contract(ov.plan, t_flat)}),
+        # wrong wire dtype, strict mode
+        "wire_mut": sorted({x.kind
+                            for x in check_contract(wrong_wire, t_ov,
+                                                    strict_dtype=True)}),
+    }
+print("RESULT:" + json.dumps(res))
+"""
+
+
+@pytest.mark.distributed
+def test_contract_flags_seeded_mutations():
+    res = distributed_run(MUTATION_CODE, devices=8, timeout=900)
+    assert res["clean_ov"] == [], res
+    assert res["clean_base"] == [], res
+    assert res["overlap_mut"] == ["schedule"], res
+    assert "unexpected-collective" in res["extra_ar_mut"], res
+    assert "collective-count" in res["extra_ar_mut"], res
+    assert res["wire_mut"] == ["wire-dtype"], res
+
+
+VERIFY_GATE_CODE = """
+from repro.configs import get_config, reduced, RunConfig, ShapeConfig
+from repro.core.transform import estimate_census, get_runner
+from repro.data import SyntheticLM
+
+cfg = reduced(get_config("seamless-m4t-medium"))
+shape = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
+kw = dict(attention_impl="naive", remat="none", param_dtype="float32",
+          compute_dtype="float32", wire_dtype="float32",
+          bucket_bytes=256 * 1024, verify_contract=True)
+ds = SyntheticLM(cfg.vocab_size, 32, 8, is_encdec=True,
+                 frames_dim=cfg.d_model, frames_len=8)
+mesh = make_mesh((8, 1), ("data", "model"))
+with use_mesh(mesh):
+    # the gate runs inside build_step: a fresh build AND a forced replan
+    # both pass it without raising
+    run = get_runner(cfg, shape, RunConfig(**kw), mesh=mesh)
+    loss0 = float(run.run(ds.batch(0))["loss"])
+    diff = run.replan(estimate_census(run.model, run.rt), force=True)
+    loss1 = float(run.run(ds.batch(1))["loss"])
+    findings = run.check_contract()
+print("RESULT:" + json.dumps({
+    "rebuilt": diff["rebuilt"], "findings": [str(x) for x in findings],
+    "losses_finite": bool(loss0 == loss0 and loss1 == loss1)}))
+"""
+
+
+@pytest.mark.distributed
+def test_verify_contract_gate_on_build_and_replan():
+    res = distributed_run(VERIFY_GATE_CODE, devices=8, timeout=900)
+    assert res["rebuilt"] is True, res
+    assert res["findings"] == [], res
+    assert res["losses_finite"], res

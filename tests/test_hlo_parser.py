@@ -4,7 +4,9 @@ import jax.numpy as jnp
 import pytest
 
 from repro.compat import cost_analysis
-from repro.utils.hlo import analyze_hlo, _shape_bytes, _ring_factor
+from repro.utils.hlo import (analyze_hlo, dot_bearing_events, _group_size,
+                             _replica_groups, _result_type, _ring_factor,
+                             _shape_bytes)
 
 
 def test_shape_bytes():
@@ -12,6 +14,34 @@ def test_shape_bytes():
     assert _shape_bytes("bf16[10]") == 20
     assert _shape_bytes("(f32[2,2]{1,0}, s32[4])") == 32
     assert _shape_bytes("pred[]") == 1
+
+
+def test_start_collective_counts_result_half_only():
+    """Async ``-start`` collectives are typed (operands, results); summing
+    the whole tuple double-counts the wire bytes."""
+    t = "(f32[4,8]{1,0}, f32[32,8]{1,0})"
+    assert _shape_bytes(_result_type("all-gather-start", t)) == 32 * 8 * 4
+    # sync op with a genuine tuple result is untouched
+    assert _shape_bytes(_result_type("all-gather", t)) == (4 + 32) * 8 * 4
+    # all-reduce-start aliases equal shapes; result half = one of them
+    t2 = "(f32[16]{0}, f32[16]{0})"
+    assert _shape_bytes(_result_type("all-reduce-start", t2)) == 64
+    # odd tuples (no operand/result split) pass through
+    t3 = "(f32[4], f32[4], s32[2])"
+    assert _shape_bytes(_result_type("all-reduce-start", t3)) == 40
+
+
+def test_replica_groups_multi_group():
+    assert _replica_groups("all-reduce(...), replica_groups={{0,1},{2,3}}"
+                           ) == [[0, 1], [2, 3]]
+    assert _replica_groups("..., replica_groups={0,1,2}") == [[0, 1, 2]]
+    # unequal groups: ring cost follows the LARGEST group
+    line = "..., replica_groups={{0},{1,2,3}}"
+    assert _replica_groups(line) == [[0], [1, 2, 3]]
+    assert _group_size(line) == 3
+    assert _group_size("..., replica_groups={{4,5},{6,7}}") == 2
+    # iota tile-assignment form survives
+    assert _group_size("..., replica_groups=[4,2]<=[8]") == 2
 
 
 def test_ring_factors():
@@ -74,3 +104,42 @@ ENTRY %main (p0: f32[16,8]) -> f32[16,8] {
     # f32 wire-correction halves it
     s2 = analyze_hlo(text, f32_collective_scale=0.5)
     assert s2.collective_bytes == pytest.approx(16 * 8 * 4 * 0.75)
+
+
+def test_dot_bearing_events_on_canned_scheduled_module():
+    """The shared scheduling API: collective/loop positions and the
+    first-vs-last comparison both tests and the contract checker use."""
+    text = """
+HloModule test, is_scheduled=true
+
+%body (c: f32[8,8]) -> f32[8,8] {
+  %c = f32[8,8]{1,0} parameter(0)
+  ROOT %d = f32[8,8]{1,0} dot(%c, %c), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%cond (c: f32[8,8]) -> pred[] {
+  %c = f32[8,8]{1,0} parameter(0)
+  ROOT %p = pred[] constant(false)
+}
+
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %ar0 = bf16[8192]{0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%add
+  %w = f32[8,8]{1,0} while(%p0), condition=%cond, body=%body
+  %ar1 = f32[5]{0} all-reduce(%p0), replica_groups={{0,1}}, to_apply=%add
+  ROOT %out = f32[8,8]{1,0} copy(%w)
+}
+"""
+    sched = dot_bearing_events(text, min_bytes=1024)
+    assert sched["scheduled"]
+    assert len(sched["loops"]) == 1
+    assert len(sched["collectives"]) == 1      # the scalar psum is filtered
+    assert sched["first_collective"] < sched["last_loop"]
+    ev = [e for e in sched["events"] if e["collective"]]
+    assert [e["elems"] for e in ev] == [8192, 5]
+    assert [e["dtype"] for e in ev] == ["bf16", "f32"]
+    # no byte filter: both collectives appear
+    assert len(dot_bearing_events(text)["collectives"]) == 2
+    # empty sides stay None instead of raising
+    empty = dot_bearing_events(text, collective="all-gather")
+    assert empty["first_collective"] is None

@@ -101,7 +101,7 @@ OVERLAP_CODE = """
 from repro.configs import get_config, reduced, RunConfig, ShapeConfig
 from repro.core.transform import get_runner
 from repro.data import SyntheticLM
-from repro.utils.hlo import is_scheduled, scheduled_events
+from repro.utils.hlo import dot_bearing_events
 
 cfg = reduced(get_config("seamless-m4t-medium"))
 shape = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
@@ -113,18 +113,16 @@ ds = SyntheticLM(cfg.vocab_size, 32, 8, is_encdec=True,
 
 def probe(run):
     txt = run.train_step.lower(run.state, ds.batch(0)).compile().as_text()
-    ev = scheduled_events(txt)
-    # bucket all-reduces are >= tens of KB; the fused scalar psum is ~100 B
-    ars = [e["pos"] for e in ev
-           if e["collective"] == "all-reduce" and e["bytes"] > 16384]
+    # bucket all-reduces are >= tens of KB; the fused scalar psum is ~100 B.
     # the model scans over layers, so its matmul work (forward AND
     # backward) runs inside dot-bearing while loops; top-level dots are
     # the grad-norm clip, which legitimately follows the exchange
-    loops = [e["pos"] for e in ev
-             if e["kind"] == "while" and e["grad_math"]]
-    return {"scheduled": is_scheduled(txt), "first_ar": min(ars),
-            "n_ars": len(ars), "last_loop": max(loops),
-            "n_loops": len(loops)}
+    sched = dot_bearing_events(txt, min_bytes=16384)
+    return {"scheduled": sched["scheduled"],
+            "first_ar": sched["first_collective"],
+            "n_ars": len(sched["collectives"]),
+            "last_loop": sched["last_loop"],
+            "n_loops": len(sched["loops"])}
 
 mesh = make_mesh((8, 1), ("data", "model"))
 with use_mesh(mesh):
@@ -171,7 +169,7 @@ SPARSE_OVERLAP_CODE = """
 from repro.configs import get_config, reduced, RunConfig, ShapeConfig
 from repro.core.transform import get_runner
 from repro.data import SyntheticLM
-from repro.utils.hlo import is_scheduled, scheduled_events
+from repro.utils.hlo import dot_bearing_events
 
 cfg = reduced(get_config("seamless-m4t-medium"))
 shape = ShapeConfig("tiny", seq_len=32, global_batch=8, kind="train")
@@ -186,18 +184,15 @@ ds = SyntheticLM(cfg.vocab_size, 32, 8, is_encdec=True,
 
 def probe(run):
     txt = run.train_step.lower(run.state, ds.batch(0)).compile().as_text()
-    ev = scheduled_events(txt)
     # row buffers are (capacity, d_model) f32 all-gathers — tens of KB; the
     # uid gathers are (capacity,) int32 and fall under the byte filter
-    ags = [e["pos"] for e in ev
-           if e["collective"] == "all-gather" and e["bytes"] > 16384]
-    loops = [e["pos"] for e in ev
-             if e["kind"] == "while" and e["grad_math"]]
-    last = max(loops)
-    return {"scheduled": is_scheduled(txt), "n_ags": len(ags),
+    sched = dot_bearing_events(txt, collective="all-gather",
+                               min_bytes=16384)
+    ags, last = sched["collectives"], sched["last_loop"]
+    return {"scheduled": sched["scheduled"], "n_ags": len(ags),
             "ags_before": sum(1 for p in ags if p < last),
             "ags_after": sum(1 for p in ags if p > last),
-            "n_loops": len(loops)}
+            "n_loops": len(sched["loops"])}
 
 mesh = make_mesh((8, 1), ("data", "model"))
 with use_mesh(mesh):

@@ -47,9 +47,25 @@ def collect() -> dict:
         "kernel_autotune": _autotune_status(),
         "fused_apply": _fused_apply_eligibility(),
         "serving": _serve_eligibility(),
+        "analysis": _analysis_status(),
     }
     report["ok"] = bool(report["jax"]["supported"])
     return report
+
+
+def _analysis_status() -> dict:
+    """Static-analysis availability and the repo's current lint status
+    (analysis/lint.py): the CI `lint` job fails on any finding, so a
+    non-zero count here predicts that failure locally."""
+    try:
+        from repro.analysis.lint import lint_repo
+        findings = lint_repo()
+        return {"available": True, "lint_findings": len(findings),
+                "clean": not findings,
+                "kinds": sorted({f.kind for f in findings})}
+    except Exception as e:
+        return {"available": False, "clean": False,
+                "error": f"{type(e).__name__}: {e}"}
 
 
 def _autotune_status() -> dict:
@@ -252,6 +268,15 @@ def main() -> int:
           f"{at['heartbeats_comparable']}  eviction resolves {evict}  "
           f"probation/readmit={at['probation_readmit']}  "
           f"stale fallback=always (plan-level)")
+    an = report["analysis"]
+    if an.get("available"):
+        status = "clean" if an["clean"] else \
+            f"{an['lint_findings']} finding(s) {an['kinds']}"
+        print(f"static analysis: spmd lint {status}; plan-contract checker "
+              "available (RunConfig.verify_contract, tools/spmd_lint.py)")
+    else:
+        print("static analysis: UNAVAILABLE "
+              f"({an.get('error', 'unknown')})")
     sv = report["serving"]
     print(f"serving: paged engine for {'/'.join(sv['paged_families'])} "
           f"({sv['prefill_executables']} prefill buckets "

@@ -1,0 +1,45 @@
+#!/usr/bin/env python
+"""Repo-wide SPMD hygiene lint (CI gate).
+
+Runs the AST rules in ``repro.analysis.lint`` over ``src/``,
+``benchmarks/`` and ``tools/`` (or explicit paths) and exits nonzero on
+any finding. ``--json`` prints the findings as a JSON list for tooling.
+
+    PYTHONPATH=src python tools/spmd_lint.py
+    PYTHONPATH=src python tools/spmd_lint.py --json src/repro/core
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.lint import lint_paths, lint_repo  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: src benchmarks tools)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON")
+    args = ap.parse_args(argv)
+
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    if args.paths:
+        findings = lint_paths(args.paths, root)
+    else:
+        findings = lint_repo(root)
+
+    if args.as_json:
+        print(json.dumps([f.to_dict() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(str(f))
+        print(f"spmd_lint: {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
